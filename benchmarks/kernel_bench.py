@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference, wall time on
+CPU + analytic flops.  Interpret-mode timing measures correctness-path cost,
+not TPU performance — the TPU-relevant numbers are the roofline terms in
+EXPERIMENTS.md; this harness checks call overhead and validates shapes at
+benchmark scale.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_all():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # bdeu_count: paper-scale single-candidate table (m=5000, q=4096)
+    from repro.kernels.bdeu_count import contingency_counts
+    cfgv = jax.random.randint(key, (5000,), 0, 4096, dtype=jnp.int32)
+    child = jax.random.randint(key, (5000,), 0, 4, dtype=jnp.int32)
+    for impl, use_ref in (("pallas_interp", False), ("jnp_ref", True)):
+        us = _time(lambda a, b: contingency_counts(
+            a, b, max_q=4096, r_max=4, use_ref=use_ref), cfgv, child)
+        rows.append((f"bdeu_count/{impl}", us,
+                     "m=5000 q=4096 r=4; flops≈%.2e" % (2 * 5000 * 4096)))
+
+    # flash attention: one 1k x 1k head block
+    from repro.kernels.flash_attention import flash_attention
+    q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 1024, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 1024, 64), jnp.float32)
+    for impl, use_ref in (("pallas_interp", False), ("jnp_ref", True)):
+        us = _time(lambda a, b, c: flash_attention(
+            a, b, c, causal=True, use_ref=use_ref), q, k, v)
+        rows.append((f"flash_attention/{impl}", us,
+                     "B1 H4 T1k D64; flops≈%.2e" % (4 * 4 * 1024 * 1024 * 64)))
+
+    # ssd scan: zamba-like chunk
+    from repro.kernels.ssd_scan import ssd_scan
+    x = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
+    a = -jax.nn.softplus(jax.random.normal(key, (1, 4, 1024)))
+    b = jax.random.normal(key, (1, 4, 1024, 64)) * 0.3
+    c = jax.random.normal(key, (1, 4, 1024, 64)) * 0.3
+    for impl, use_ref in (("pallas_interp", False), ("jnp_ref", True)):
+        us = _time(lambda *t: ssd_scan(*t, chunk=128, use_ref=use_ref),
+                   x, a, b, c)
+        rows.append((f"ssd_scan/{impl}", us, "B1 H4 T1k P64 N64"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench_all():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

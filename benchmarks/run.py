@@ -1,0 +1,75 @@
+"""Benchmark entry point:  PYTHONPATH=src python -m benchmarks.run
+
+One harness per paper artifact:
+  * Table 2a/2b/2c  -> benchmarks.table2 (BDeu / SMHD / time+evals sweep)
+  * dry-run + roofline -> benchmarks.roofline_report over results/dryrun.jsonl
+  * kernels        -> benchmarks.kernel_bench (CSV: name,us_per_call,derived)
+
+Env overrides: REPRO_BENCH_SCALE / REPRO_BENCH_M / REPRO_BENCH_SEEDS.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> None:
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))
+    m = int(os.environ.get("REPRO_BENCH_M", "1200"))
+    seeds = int(os.environ.get("REPRO_BENCH_SEEDS", "1"))
+
+    print("=" * 72)
+    print("## Paper Table 2 (BDeu / SMHD / CPU time) — reduced-scale families")
+    print(f"## scale={scale} m={m} seeds={seeds} (env REPRO_BENCH_* to change)")
+    print("=" * 72)
+    from benchmarks import table2
+    rows = table2.bench(["pigs_like", "link_like", "munin_like"],
+                        scale, m, list(range(seeds)))
+    summary = table2.summarize(rows)
+    print("\n=== Table 2 summary ===")
+    print(f"{'family':12s} {'algo':9s} {'BDeu/m':>10s} {'SMHD':>7s} "
+          f"{'time(s)':>8s} {'evals':>10s}")
+    for s in summary:
+        print(f"{s['family']:12s} {s['algo']:9s} {s['bdeu_per_inst']:10.4f} "
+              f"{s['smhd']:7.1f} {s['wall_s']:8.2f} {s['score_evals']:10.0f}")
+
+    # paper's headline: cGES-L cheaper than GES at comparable quality
+    for fam in ("pigs_like", "link_like", "munin_like"):
+        ges = [s for s in summary if s["family"] == fam and s["algo"] == "GES"]
+        cg4 = [s for s in summary
+               if s["family"] == fam and s["algo"] == "cGES-L-4"]
+        if ges and cg4:
+            sp_t = ges[0]["wall_s"] / max(cg4[0]["wall_par_s"], 1e-9)
+            sp_e = ges[0]["score_evals"] / max(cg4[0]["score_evals"], 1)
+            dq = cg4[0]["bdeu_per_inst"] - ges[0]["bdeu_per_inst"]
+            print(f"speedup {fam:12s} cGES-L-4 vs GES: k-worker wall x{sp_t:.2f}, "
+                  f"score-evals x{sp_e:.2f}, dBDeu/m {dq:+.4f}")
+
+    print()
+    print("=" * 72)
+    print("## Roofline (single-pod 16x16, from dry-run artifacts)")
+    print("=" * 72)
+    from benchmarks import roofline_report
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "results", "dryrun.jsonl")
+    if os.path.exists(path):
+        recs = roofline_report.load(path)
+        for row in roofline_report.table(recs, "pod1"):
+            print(",".join(str(c) for c in row[:8]))
+    else:
+        print("dryrun.jsonl missing — run benchmarks/sweep_dryrun.sh first")
+
+    print()
+    print("=" * 72)
+    print("## Kernel microbenchmarks (name,us_per_call,derived)")
+    print("=" * 72)
+    from benchmarks import kernel_bench
+    for name, us, derived in kernel_bench.bench_all():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""The cGES ring as ONE compiled multi-device program (shard_map + ppermute).
+
+Runs on 8 simulated host devices; on a TPU pod the same program runs on the
+production mesh (see repro/launch/dryrun.py --arch cges_ring).
+
+    PYTHONPATH=src python examples/distributed_ring.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.core import GESConfig, ges_host, partition
+from repro.core.cges import edge_add_limit
+from repro.core.dag import is_dag_np, smhd_np
+from repro.core.ring import RingSpec, ring_cges
+from repro.data.bn import forward_sample, random_bn
+from repro.launch.mesh import make_host_mesh
+
+K = 4
+rng = np.random.default_rng(1)
+bn = random_bn(rng, n=14, n_edges=18, max_parents=3)
+data = forward_sample(bn, 1200, rng)
+
+config = GESConfig(max_q=256)
+masks = partition.partition_edges(data, bn.arities, K)
+mesh = make_host_mesh(K, axis="ring")
+print(f"mesh: {mesh} (ring of {K} devices)")
+
+graphs, scores, rounds = ring_cges(
+    data, bn.arities, masks, mesh, RingSpec(k=K, max_rounds=8), config,
+    add_limit=edge_add_limit(bn.n, K))
+best = int(np.argmax(scores))
+print(f"ring converged in {rounds} rounds; "
+      f"per-process BDeu: {[round(float(s), 1) for s in scores]}")
+
+# fine-tuning pass (host GES, unrestricted) — preserves GES guarantees
+res = ges_host(data, bn.arities, init_adj=graphs[best], config=config)
+assert is_dag_np(res.adj)
+print(f"after fine-tune: BDeu/m={res.score / len(data):.4f} "
+      f"SMHD vs truth={smhd_np(res.adj, bn.adj)}")

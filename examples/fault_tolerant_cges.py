@@ -1,0 +1,45 @@
+"""Fault tolerance for the paper's workload: kill a ring member mid-run and
+let the elastic ring repair itself (the lost edge subset is re-merged into
+the ring predecessor, preserving the disjoint cover of E).
+
+    PYTHONPATH=src python examples/fault_tolerant_cges.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import GESConfig, ScoreCache, ges_host, partition
+from repro.core.cges import edge_add_limit
+from repro.core.dag import smhd_np
+from repro.data.bn import forward_sample, random_bn
+from repro.launch.cges_run import ring_rounds
+
+rng = np.random.default_rng(2)
+bn = random_bn(rng, n=16, n_edges=22, max_parents=3)
+data = forward_sample(bn, 1500, rng)
+config = GESConfig(max_q=512)
+masks = partition.partition_edges(data, bn.arities, 4)
+lim = edge_add_limit(bn.n, 4)
+
+print("— run A: healthy 4-member ring —")
+adj_a, score_a, rounds_a, _ = ring_rounds(
+    data, bn.arities, masks, config, lim, max_rounds=10)
+
+print("\n— run B: member 2 dies in round 1 (elastic repair to k=3) —")
+adj_b, score_b, rounds_b, masks_b = ring_rounds(
+    data, bn.arities, masks, config, lim, max_rounds=10,
+    fail_at_round=1, fail_member=2)
+assert masks_b.shape[0] == 3
+off = ~np.eye(bn.n, dtype=bool)
+assert np.all(masks_b.sum(axis=0)[off] == 1), "edge cover broken!"
+
+cache = ScoreCache()
+fin_a = ges_host(data, bn.arities, init_adj=adj_a, config=config, cache=cache)
+fin_b = ges_host(data, bn.arities, init_adj=adj_b, config=config, cache=cache)
+print(f"\nhealthy : BDeu/m={fin_a.score / len(data):.4f} "
+      f"SMHD={smhd_np(fin_a.adj, bn.adj)}")
+print(f"repaired: BDeu/m={fin_b.score / len(data):.4f} "
+      f"SMHD={smhd_np(fin_b.adj, bn.adj)}")
+print("the repaired ring still searches the full edge set E — "
+      "same guarantees, one fewer worker")

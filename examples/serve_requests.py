@@ -1,0 +1,14 @@
+"""Batched serving example: slot-pool continuous batching over the decode
+step (the production shape of `decode_32k`, reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_requests.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "qwen2_7b", "--smoke", "--slots", "4",
+     "--max-new", "12", "--requests", "6"],
+    check=True,
+    env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})

@@ -1,0 +1,2 @@
+from .common import (ARCH_IDS, SHAPES, TP, ShapeSpec, for_mesh, get_config,
+                     get_smoke_config, shape_applicable)

@@ -1,0 +1,97 @@
+"""Architecture registry + the assigned input-shape grid.
+
+Every assigned architecture has a ``full()`` (exact public config — exercised
+only via the ``.lower().compile()`` dry-run) and a ``smoke()`` (reduced same-
+family config for CPU tests).  ``for_mesh`` applies TP head/vocab/expert
+padding for a given model-axis size (padded slots are zero-masked at init, so
+the padded model computes exactly the true architecture).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional
+
+from ..models.config import ModelConfig, MoEConfig, SSMConfig
+
+TP = 16  # production model-axis size (both meshes)
+
+ARCH_IDS: List[str] = [
+    "granite_moe_3b_a800m",
+    "grok_1_314b",
+    "whisper_base",
+    "llava_next_34b",
+    "zamba2_7b",
+    "gemma_7b",
+    "qwen2_7b",
+    "starcoder2_3b",
+    "glm4_9b",
+    "mamba2_130m",
+]
+
+# ---------------------------------------------------------------------------
+# Input-shape grid (the 4 assigned shapes; skips recorded per-arch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs whose attention is quadratic-only: long_500k is skipped (per brief)
+FULL_ATTENTION_ARCHS = {
+    "granite_moe_3b_a800m", "grok_1_314b", "whisper_base", "llava_next_34b",
+    "gemma_7b", "qwen2_7b", "starcoder2_3b", "glm4_9b",
+}
+
+
+def shape_applicable(arch_id: str, shape: str) -> Optional[str]:
+    """None if the cell runs; else the skip reason (recorded in EXPERIMENTS)."""
+    if shape == "long_500k" and arch_id in FULL_ATTENTION_ARCHS:
+        return "pure full attention: 512k decode KV is quadratic-history; skipped per brief"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# TP padding
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def for_mesh(cfg: ModelConfig, tp: int = TP) -> ModelConfig:
+    """Pad head/expert counts to TP divisibility (zero-masked at init)."""
+    upd = {}
+    if cfg.n_heads and cfg.n_heads % tp:
+        upd["n_heads_pad"] = _round_up(cfg.n_heads, tp)
+    if cfg.moe is not None and cfg.moe.n_experts % tp == 0:
+        pass
+    elif cfg.moe is not None:
+        # pad experts only when the param overhead is modest (<= 1.5x); a
+        # 2x pad (e.g. grok 8 -> 16) would double MoE weight memory — those
+        # archs use TP-within-expert (d_ff sharding) instead.
+        padded = _round_up(cfg.moe.n_experts, tp)
+        if padded <= 1.5 * cfg.moe.n_experts:
+            upd["moe"] = dataclasses.replace(cfg.moe, n_experts_pad=padded)
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def get_config(arch_id: str, tp: int = TP) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return for_mesh(mod.full(), tp)
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.smoke()

@@ -1,0 +1,21 @@
+"""gemma-7b [dense]: 28L d_model=3072 16H MHA head_dim=256 d_ff=24576
+vocab=256000, GeGLU."""
+from ..models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma_7b",
+        n_layers=28, d_model=3072, vocab=256000,
+        n_heads=16, n_kv_heads=16, head_dim=256, d_ff=24576,
+        act="geglu", tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma_smoke",
+        n_layers=2, d_model=64, vocab=256,
+        n_heads=4, n_kv_heads=4, head_dim=32, d_ff=128,
+        act="geglu", tie_embeddings=True, remat=False,
+    )

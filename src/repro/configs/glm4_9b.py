@@ -1,0 +1,21 @@
+"""glm4-9b [dense]: 40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552,
+RoPE."""
+from ..models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="glm4_9b",
+        n_layers=40, d_model=4096, vocab=151552,
+        n_heads=32, n_kv_heads=2, head_dim=128, d_ff=13696,
+        act="swiglu", tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="glm4_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        act="swiglu", tie_embeddings=False, remat=False,
+    )

@@ -1,0 +1,28 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2, final-logit softcap 30 (per the public grok-1 release).
+
+314B total params: weights are 2D-sharded (data x model, FSDP+TP) — model-axis
+TP alone (16-way) would need 39 GB/chip.
+"""
+from ..models.config import ModelConfig, MoEConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="grok_1_314b",
+        n_layers=64, d_model=6144, vocab=131072,
+        n_heads=48, n_kv_heads=8, head_dim=128, d_ff=32768,
+        act="gelu", moe=MoEConfig(n_experts=8, top_k=2),
+        logit_softcap=30.0, tie_embeddings=True, fsdp_params=True,
+        moe_group_size=4096,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="grok_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        act="gelu", moe=MoEConfig(n_experts=4, top_k=2),
+        logit_softcap=30.0, tie_embeddings=True, remat=False,
+    )

@@ -1,0 +1,31 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+Anyres tiling is STUBBED per the brief: ``input_specs()`` provides precomputed
+patch embeddings (B, 2880, d_model) = 4 tiles + 1 base image x 576 patches,
+spliced over the prompt's image-token prefix.  The LM backbone is exact.
+"""
+from ..models.config import ModelConfig
+
+N_PATCH_TOKENS = 2880  # (4 anyres tiles + 1 base) * 576 CLIP patches
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llava_next_34b",
+        n_layers=60, d_model=7168, vocab=64000,
+        n_heads=56, n_kv_heads=8, head_dim=128, d_ff=20480,
+        act="swiglu",
+        frontend="vision_stub", frontend_tokens=N_PATCH_TOKENS,
+        frontend_dim=7168, tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llava_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        act="swiglu",
+        frontend="vision_stub", frontend_tokens=8, frontend_dim=64,
+        tie_embeddings=False, remat=False,
+    )

@@ -1,0 +1,23 @@
+"""mamba2-130m [ssm]: 24L d_model=768, attention-free SSD (state-space
+duality), ssm_state=128, vocab=50280."""
+from ..models.config import ModelConfig, SSMConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2_130m",
+        n_layers=24, d_model=768, vocab=50280,
+        block_pattern="mamba",
+        ssm=SSMConfig(state_dim=128, head_dim=64, expansion=2, conv_width=4),
+        tie_embeddings=True, dp_over_model=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        block_pattern="mamba",
+        ssm=SSMConfig(state_dim=16, head_dim=16, expansion=2, conv_width=4),
+        tie_embeddings=True, remat=False, ssd_chunk=8,
+    )

@@ -1,0 +1,22 @@
+"""qwen2-7b [dense]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064,
+QKV bias."""
+from ..models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2_7b",
+        n_layers=28, d_model=3584, vocab=152064,
+        n_heads=28, n_kv_heads=4, head_dim=128, d_ff=18944,
+        act="swiglu", qkv_bias=True, rope_theta=1e6,
+        tie_embeddings=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        act="swiglu", qkv_bias=True, tie_embeddings=False, remat=False,
+    )

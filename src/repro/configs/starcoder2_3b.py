@@ -1,0 +1,22 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152, RoPE, plain-GELU MLP."""
+from ..models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2_3b",
+        n_layers=30, d_model=3072, vocab=49152,
+        n_heads=24, n_kv_heads=2, head_dim=128, d_ff=12288,
+        act="gelu", qkv_bias=True, rope_theta=1e5,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        act="gelu", qkv_bias=True, tie_embeddings=True, remat=False,
+    )

@@ -1,0 +1,29 @@
+"""whisper-base [audio]: enc-dec, 6+6L d_model=512 8H d_ff=2048 vocab=51865.
+
+Modality frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings (B, 1500, d_model) — the conv1d+log-mel stack is
+out of scope; the transformer backbone is exact.
+"""
+from ..models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_base",
+        n_layers=6, d_model=512, vocab=51865,
+        n_heads=8, n_kv_heads=8, head_dim=64, d_ff=2048,
+        act="gelu", enc_dec=True, n_encoder_layers=6,
+        frontend="audio_stub", frontend_tokens=1500, frontend_dim=512,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_smoke",
+        n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+        act="gelu", enc_dec=True, n_encoder_layers=2,
+        frontend="audio_stub", frontend_tokens=32, frontend_dim=64,
+        tie_embeddings=True, remat=False,
+    )

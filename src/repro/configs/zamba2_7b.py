@@ -1,0 +1,30 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584, Mamba2 backbone (ssm_state=64) with a
+single SHARED attention block (32H MHA, d_ff=14336 MLP) applied every 6
+layers, vocab=32000.
+
+The shared block's weights are one set reused at 13 depths; each application
+keeps its own KV cache row (weights shared, activations not).
+"""
+from ..models.config import ModelConfig, SSMConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2_7b",
+        n_layers=81, d_model=3584, vocab=32000,
+        n_heads=32, n_kv_heads=32, head_dim=112, d_ff=14336,
+        act="swiglu", block_pattern="zamba_hybrid", hybrid_attn_every=6,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expansion=2, conv_width=4),
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2_smoke",
+        n_layers=5, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+        act="swiglu", block_pattern="zamba_hybrid", hybrid_attn_every=2,
+        ssm=SSMConfig(state_dim=16, head_dim=16, expansion=2, conv_width=4),
+        tie_embeddings=True, remat=False, ssd_chunk=8,
+    )

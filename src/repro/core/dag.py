@@ -1,0 +1,206 @@
+"""DAG utilities for Bayesian-network structure learning.
+
+Graphs are dense adjacency matrices ``A`` of shape (n, n) with
+``A[x, y] == 1``  meaning a directed edge  ``x -> y``  (x is a parent of y).
+Two mirrored engines are provided:
+
+* numpy (host) versions for the orchestration / fusion path, and
+* jnp (device) versions that are jit-safe (fixed shapes, no data-dependent
+  Python control flow) for use inside the ring executor's compiled sweeps.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Reachability / acyclicity
+# ---------------------------------------------------------------------------
+
+def transitive_closure_np(adj: np.ndarray) -> np.ndarray:
+    """Boolean reachability matrix R, R[a, b] = 1 iff a path a -> ... -> b exists.
+
+    Repeated boolean squaring: O(n^3 log n) bitset-backed via numpy matmul.
+    """
+    n = adj.shape[0]
+    reach = adj.astype(bool)
+    steps = max(1, int(np.ceil(np.log2(max(n, 2)))))
+    for _ in range(steps):
+        nxt = reach | (reach @ reach)
+        if np.array_equal(nxt, reach):
+            break
+        reach = nxt
+    return reach
+
+
+def transitive_closure(adj: Array) -> Array:
+    """jnp mirror of :func:`transitive_closure_np` (fixed trip count, jittable)."""
+    n = adj.shape[0]
+    steps = max(1, int(np.ceil(np.log2(max(n, 2)))))
+    reach = adj.astype(bool)
+
+    def body(_, r):
+        return r | (r.astype(jnp.float32) @ r.astype(jnp.float32) > 0)
+
+    return jax.lax.fori_loop(0, steps, body, reach)
+
+
+def is_dag_np(adj: np.ndarray) -> bool:
+    reach = transitive_closure_np(adj)
+    return not bool(np.any(np.diag(reach)))
+
+
+def is_dag(adj: Array) -> Array:
+    reach = transitive_closure(adj)
+    return ~jnp.any(jnp.diagonal(reach))
+
+
+def closure_after_edge(reach: Array, x, y) -> Array:
+    """Incremental closure update after inserting edge x -> y.
+
+    Anything that reaches x (or is x) now reaches anything y reaches (or y).
+    Rank-1 boolean update, O(n^2); works for numpy and jnp inputs.
+    """
+    n = reach.shape[0]
+    if isinstance(reach, np.ndarray):
+        src = reach[:, x].copy()
+        src[x] = True
+        dst = reach[y, :].copy()
+        dst[y] = True
+        return reach | np.outer(src, dst)
+    src = reach[:, x].at[x].set(True)
+    dst = reach[y, :].at[y].set(True)
+    return reach | jnp.outer(src, dst)
+
+
+def topological_order_np(adj: np.ndarray) -> np.ndarray:
+    """Kahn's algorithm. Raises ValueError on cyclic input."""
+    n = adj.shape[0]
+    adj = adj.astype(bool).copy()
+    indeg = adj.sum(axis=0)
+    order = []
+    ready = sorted(np.flatnonzero(indeg == 0).tolist())
+    while ready:
+        v = ready.pop(0)
+        order.append(v)
+        for w in np.flatnonzero(adj[v]):
+            adj[v, w] = False
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                ready.append(int(w))
+        ready.sort()
+    if len(order) != n:
+        raise ValueError("graph has a cycle")
+    return np.asarray(order, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Moral graph / metrics support
+# ---------------------------------------------------------------------------
+
+def moral_graph_np(adj: np.ndarray) -> np.ndarray:
+    """Undirected moralized graph: skeleton + marry all co-parents."""
+    adj = adj.astype(bool)
+    und = adj | adj.T
+    # marry parents:  P^T P  has [i,j] > 0 iff i and j share a child.
+    co_parent = (adj.astype(np.int64) @ adj.astype(np.int64).T) > 0
+    moral = und | co_parent
+    np.fill_diagonal(moral, False)
+    return moral
+
+
+def smhd_np(adj_a: np.ndarray, adj_b: np.ndarray) -> int:
+    """Structural Moral Hamming Distance: edge mismatches between moral graphs."""
+    ma, mb = moral_graph_np(adj_a), moral_graph_np(adj_b)
+    diff = np.triu(ma ^ mb, k=1)
+    return int(diff.sum())
+
+
+def shd_np(adj_a: np.ndarray, adj_b: np.ndarray) -> int:
+    """Plain structural Hamming distance on directed adjacencies."""
+    return int(np.sum(adj_a.astype(bool) != adj_b.astype(bool)))
+
+
+# ---------------------------------------------------------------------------
+# DAG -> CPDAG (Chickering 1995 order-edges + compelled labelling)
+# ---------------------------------------------------------------------------
+
+def dag_to_cpdag_np(adj: np.ndarray) -> np.ndarray:
+    """Return CPDAG mixed graph: C[x,y]=C[y,x]=1 for reversible edges,
+    C[x,y]=1, C[y,x]=0 for compelled x->y.
+    """
+    adj = adj.astype(bool)
+    n = adj.shape[0]
+    topo = topological_order_np(adj)
+    pos = np.empty(n, dtype=np.int64)
+    pos[topo] = np.arange(n)
+
+    # Order edges: (y ascending by topo of child, x descending by topo of parent)
+    edges = [(int(x), int(y)) for x in range(n) for y in range(n) if adj[x, y]]
+    edges.sort(key=lambda e: (pos[e[1]], -pos[e[0]]))
+
+    UNKNOWN, COMPELLED, REVERSIBLE = 0, 1, 2
+    label = {e: UNKNOWN for e in edges}
+
+    for (x, y) in edges:
+        if label[(x, y)] != UNKNOWN:
+            continue
+        done = False
+        # step: for every w -> x compelled
+        for w in np.flatnonzero(adj[:, x]):
+            w = int(w)
+            if label.get((w, x)) == COMPELLED:
+                if not adj[w, y]:
+                    # label x->y and every edge into y compelled
+                    for p in np.flatnonzero(adj[:, y]):
+                        label[(int(p), y)] = COMPELLED
+                    done = True
+                    break
+                else:
+                    label[(w, y)] = COMPELLED
+        if done:
+            continue
+        # if there exists z -> y with z != x and z not a parent of x => compelled
+        parents_y = set(int(p) for p in np.flatnonzero(adj[:, y]))
+        exists_z = any((z != x) and (not adj[z, x]) for z in parents_y)
+        if exists_z:
+            for p in parents_y:
+                if label[(p, y)] == UNKNOWN:
+                    label[(p, y)] = COMPELLED
+        else:
+            for p in parents_y:
+                if label[(p, y)] == UNKNOWN:
+                    label[(p, y)] = REVERSIBLE
+
+    cpdag = np.zeros_like(adj, dtype=bool)
+    for (x, y), lab in label.items():
+        cpdag[x, y] = True
+        if lab == REVERSIBLE:
+            cpdag[y, x] = True
+    return cpdag
+
+
+def random_dag_np(
+    rng: np.random.Generator, n: int, n_edges: int, max_parents: int = 6
+) -> np.ndarray:
+    """Random DAG with ~n_edges edges under a random topological order."""
+    order = rng.permutation(n)
+    adj = np.zeros((n, n), dtype=bool)
+    pairs = [(i, j) for j in range(1, n) for i in range(j)]
+    rng.shuffle(pairs)
+    added = 0
+    indeg = np.zeros(n, dtype=np.int64)
+    for i, j in pairs:
+        if added >= n_edges:
+            break
+        x, y = int(order[i]), int(order[j])
+        if indeg[y] >= max_parents:
+            continue
+        adj[x, y] = True
+        indeg[y] += 1
+        added += 1
+    return adj

@@ -1,0 +1,230 @@
+"""The ring executor — cGES's learning stage as ONE compiled multi-device
+program (shard_map over a "ring" mesh axis).
+
+Mapping of the paper's distributed system onto JAX:
+
+  * k ring processes        ->  k devices (or device groups) on a mesh axis
+  * "send BN to successor"  ->  jax.lax.ppermute of the (n, n) int8 adjacency
+  * BN fusion               ->  fuse_jit: a fully traceable implementation of
+                                the sigma-consistent edge union (GHO ordering
+                                + covered-edge-reversal sink conversion),
+                                mirroring core/fusion.py op-for-op
+  * constrained GES         ->  ges.ges_jit_body (lax.while_loop program)
+  * convergence check       ->  lax.pmax over per-device best scores
+
+The entire learning stage — all rounds, all k processes — is a single
+jit-compiled program; one host call runs cGES's stage 2 to convergence.
+This is also the program that is `.lower().compile()`d on the production
+(16, 16) and (2, 16, 16) meshes by launch/dryrun.py (arch id: ``cges_ring``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from . import bdeu
+from .ges import GESConfig, ges_jit_body
+
+Array = jax.Array
+BIG = jnp.float32(3.0e38)
+
+
+# ---------------------------------------------------------------------------
+# Traceable fusion (device mirror of core/fusion.py)
+# ---------------------------------------------------------------------------
+
+def _depth_jit(adj: Array, in_s: Array) -> Array:
+    """Longest-path layer within the induced subgraph (fori over n)."""
+    n = adj.shape[0]
+    sub = adj.astype(bool) & in_s[:, None] & in_s[None, :]
+
+    def body(_, depth):
+        parent_d = jnp.where(sub, depth[:, None], -1)
+        return jnp.where(in_s, jnp.maximum(depth, parent_d.max(axis=0) + 1), -1)
+
+    depth0 = jnp.where(in_s, 0, -1)
+    return jax.lax.fori_loop(0, n, body, depth0)
+
+
+def gho_order_jit(adj_a: Array, adj_b: Array) -> Array:
+    """Greedy cheapest-sink ordering over two DAGs; returns rank (n,) int32
+    (rank[v] = position of v in sigma)."""
+    n = adj_a.shape[0]
+    a = adj_a.astype(jnp.int32)
+    b = adj_b.astype(jnp.int32)
+
+    def body(step, carry):
+        rank, remaining = carry
+        # cost(v) = out-degree within remaining subgraph, summed over DAGs
+        rem_f = remaining.astype(jnp.int32)
+        cost = (a * rem_f[None, :]).sum(1) + (b * rem_f[None, :]).sum(1)
+        cost = jnp.where(remaining, cost, jnp.iinfo(jnp.int32).max)
+        v = jnp.argmin(cost)  # deterministic: lowest index on ties
+        pos = n - 1 - step
+        return rank.at[v].set(pos), remaining.at[v].set(False)
+
+    rank0 = jnp.zeros(n, dtype=jnp.int32)
+    remaining0 = jnp.ones(n, dtype=bool)
+    rank, _ = jax.lax.fori_loop(0, n, body, (rank0, remaining0))
+    return rank
+
+
+def sigma_consistent_jit(adj: Array, rank: Array) -> Array:
+    """Traceable sink-conversion transform (see core/fusion.sigma_consistent)."""
+    n = adj.shape[0]
+    order = jnp.argsort(-rank)  # processing order: highest rank first
+
+    def process_node(step, adj):
+        v = order[step]
+        # unprocessed = nodes with rank <= rank[v] (v included)
+        in_s = rank <= rank[v]
+
+        def cond(adj):
+            out = jnp.take(adj, v, axis=0).astype(bool) & in_s
+            return out.any()
+
+        def body(adj):
+            out = jnp.take(adj, v, axis=0).astype(bool) & in_s
+            depth = _depth_jit(adj, in_s)
+            w = jnp.argmin(jnp.where(out, depth, jnp.iinfo(jnp.int32).max))
+            pa_v = jnp.take(adj, v, axis=1).astype(bool)
+            pa_w = jnp.take(adj, w, axis=1).astype(bool)
+            idx = jnp.arange(n)
+            add_to_w = pa_v & ~pa_w & (idx != w) & (idx != v)
+            add_to_v = pa_w & ~pa_v & (idx != v) & (idx != w)
+            adj = adj.at[:, w].set((pa_w | add_to_w).astype(adj.dtype))
+            pa_v2 = jnp.take(adj, v, axis=1).astype(bool)
+            adj = adj.at[:, v].set((pa_v2 | add_to_v).astype(adj.dtype))
+            adj = adj.at[v, w].set(0)
+            adj = adj.at[w, v].set(1)
+            return adj
+
+        return jax.lax.while_loop(cond, body, adj)
+
+    return jax.lax.fori_loop(0, n, process_node, adj)
+
+
+def fuse_jit(g_own: Array, g_pred: Array) -> Array:
+    """Traceable pairwise fusion: GHO order -> sigma-transform both -> union."""
+    rank = gho_order_jit(g_own, g_pred)
+    ta = sigma_consistent_jit(g_own.astype(jnp.int8), rank)
+    tb = sigma_consistent_jit(g_pred.astype(jnp.int8), rank)
+    fused = (ta.astype(bool) | tb.astype(bool)).astype(jnp.int8)
+    # Algorithm 1: fusion is skipped when either side is empty
+    own_empty = ~g_own.astype(bool).any()
+    pred_empty = ~g_pred.astype(bool).any()
+    fused = jnp.where(own_empty, g_pred.astype(jnp.int8), fused)
+    fused = jnp.where(pred_empty & ~own_empty, g_own.astype(jnp.int8), fused)
+    return fused
+
+
+# ---------------------------------------------------------------------------
+# The ring program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    k: int                       # ring size (devices along the ring axis)
+    axis: str = "ring"           # mesh axis (or tuple) carrying the ring
+    max_rounds: int = 16
+    axis_model: Optional[str] = None   # optional scoring-TP axis inside each
+    axis_model_size: int = 1           # ring process (production mesh: 'model')
+
+
+def _ring_body(data, arities, edge_mask, init_g,
+               *, spec: RingSpec, config: GESConfig, r_max: int,
+               add_limit: int):
+    """Per-device body under shard_map.  edge_mask/init_g: (1, n, n) local."""
+    axis = spec.axis
+    k = spec.k
+    n = data.shape[1]
+    edge_mask = edge_mask[0]
+    g0 = init_g[0]
+
+    perm = [(i, (i + 1) % k) for i in range(k)]  # send to successor
+
+    def one_round(g_own):
+        g_pred = jax.lax.ppermute(g_own, axis, perm)
+        fused = fuse_jit(g_own, g_pred)
+        adj, score, n_ins, n_del = ges_jit_body(
+            data, arities, fused, edge_mask,
+            jnp.int32(add_limit),
+            config.ess, config.max_parents, config.max_q, r_max,
+            config.counts_impl, config.tol, config.incremental,
+            config.child_chunk,
+            axis_model=spec.axis_model,
+            axis_model_size=spec.axis_model_size)
+        return adj, score
+
+    def cond(state):
+        g, best, go, rnd = state
+        return go & (rnd < spec.max_rounds)
+
+    def body(state):
+        g, best, go, rnd = state
+        adj, score = one_round(g)
+        round_best = jax.lax.pmax(score, axis)
+        improved = round_best > best + config.tol
+        return adj, jnp.maximum(best, round_best), improved, rnd + 1
+
+    state0 = (g0, -BIG, jnp.bool_(True), jnp.int32(0))
+    g_fin, best, _, rounds = jax.lax.while_loop(cond, body, state0)
+
+    score_fin = bdeu.graph_score_jax(
+        data, arities, g_fin, config.ess, config.max_q, r_max,
+        config.counts_impl)
+    return g_fin[None], score_fin[None], rounds
+
+
+def build_ring_program(mesh: Mesh, spec: RingSpec, config: GESConfig,
+                       r_max: int, add_limit: int):
+    """Compile-ready cGES stage-2 program for an arbitrary mesh.
+
+    The ring axis is ``spec.axis``; data/arities are replicated, edge masks
+    and graph state are sharded one-per-ring-slot.  Returns a function
+    (data, arities, edge_masks, init_graphs) -> (graphs, scores, rounds).
+    """
+    axis = spec.axis
+
+    body = partial(_ring_body, spec=spec, config=config, r_max=r_max,
+                   add_limit=add_limit)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None, None), P(axis, None, None)),
+        out_specs=(P(axis, None, None), P(axis), P()),
+        check_vma=False,
+    )
+    return jax.jit(mapped)
+
+
+def ring_cges(
+    data: np.ndarray,
+    arities: np.ndarray,
+    edge_masks: np.ndarray,
+    mesh: Mesh,
+    spec: RingSpec,
+    config: GESConfig = GESConfig(),
+    add_limit: Optional[int] = None,
+):
+    """Execute the compiled ring on a real mesh (k devices)."""
+    k, n, _ = edge_masks.shape
+    assert k == spec.k
+    r_max = int(arities.max())
+    lim = int(n * n if add_limit is None else add_limit)
+    prog = build_ring_program(mesh, spec, config, r_max, lim)
+    graphs0 = jnp.zeros((k, n, n), dtype=jnp.int8)
+    graphs, scores, rounds = prog(
+        jnp.asarray(data.astype(np.int32)),
+        jnp.asarray(arities.astype(np.int32)),
+        jnp.asarray(edge_masks.astype(np.int8)),
+        graphs0,
+    )
+    return np.asarray(graphs), np.asarray(scores), int(rounds)

@@ -1,0 +1,1 @@
+from .bn import BayesianNetwork, random_bn, forward_sample, BENCHMARK_FAMILIES

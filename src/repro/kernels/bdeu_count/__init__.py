@@ -1,0 +1,3 @@
+from .ops import contingency_counts
+from .ref import contingency_counts_ref
+from .bdeu_count import contingency_counts_pallas

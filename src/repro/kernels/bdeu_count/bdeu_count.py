@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: contingency-table accumulation for BDeu scoring.
+
+The GPU-idiomatic implementation of N_ijk counting is an atomic scatter-add
+over a hash of the parent configuration.  TPUs have no fast scatter; the
+TPU-native formulation is a *one-hot contraction on the MXU*:
+
+    counts[q, r] = sum_t  onehot(cfg[t])[q] * onehot(child[t])[r]
+                 = OH_cfg^T @ OH_child          # (max_q, TILE_M)@(TILE_M, r)
+
+tiled over the instance axis so each (TILE_M, max_q) one-hot slab lives in
+VMEM only transiently, while the (max_q, r_pad) accumulator stays resident in
+VMEM across the sequential grid.  Counts are exact in f32 (m << 2^24).
+
+Grid:      (m // TILE_M,)  — sequential on TPU, accumulator revisited.
+BlockSpec: cfg/child tiles (TILE_M,); output block (max_q, r_pad) pinned.
+Padding:   out-of-range cfg values (>= max_q, e.g. the m-padding sentinel)
+           produce all-zero one-hot rows and therefore count nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cfg_ref, child_ref, out_ref, *, max_q: int, r_pad: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cfg = cfg_ref[...]          # (TILE_M,) int32
+    child = child_ref[...]      # (TILE_M,) int32
+    tile_m = cfg.shape[0]
+
+    q_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_m, max_q), 1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_m, r_pad), 1)
+    oh_cfg = (cfg[:, None] == q_iota).astype(jnp.float32)      # (TILE_M, max_q)
+    oh_child = (child[:, None] == r_iota).astype(jnp.float32)  # (TILE_M, r_pad)
+
+    out_ref[...] += jax.lax.dot_general(
+        oh_cfg, oh_child,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def contingency_counts_pallas(
+    cfg: jax.Array,
+    child: jax.Array,
+    *,
+    max_q: int,
+    r_pad: int,
+    tile_m: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """(max_q, r_pad) f32 counts. cfg/child: (m,) int32, m % tile_m == 0."""
+    m = cfg.shape[0]
+    assert m % tile_m == 0, (m, tile_m)
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_kernel, max_q=max_q, r_pad=r_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((max_q, r_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((max_q, r_pad), jnp.float32),
+        interpret=interpret,
+    )(cfg, child)

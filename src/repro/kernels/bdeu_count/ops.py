@@ -1,0 +1,47 @@
+"""Jit'd public wrapper for the bdeu_count Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bdeu_count import contingency_counts_pallas
+from .ref import contingency_counts_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "interpret", "use_ref"))
+def contingency_counts(
+    cfg: jax.Array,
+    child: jax.Array,
+    *,
+    max_q: int,
+    r_max: int,
+    tile_m: int = 256,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """(max_q, r_max) f32 contingency table for one (parent-config, child) pair.
+
+    Pads m to a tile multiple (sentinel cfg = max_q counts nothing) and the
+    child axis to the 128-lane MXU boundary; the validated Pallas kernel runs
+    in interpret mode on CPU and compiled on TPU.
+    """
+    m = cfg.shape[0]
+    m_pad = _round_up(max(m, tile_m), tile_m)
+    r_pad = _round_up(r_max, 128)
+    cfg_p = jnp.full((m_pad,), max_q, dtype=jnp.int32).at[:m].set(
+        cfg.astype(jnp.int32))
+    child_p = jnp.zeros((m_pad,), dtype=jnp.int32).at[:m].set(
+        child.astype(jnp.int32))
+    if use_ref:
+        counts = contingency_counts_ref(cfg_p, child_p, max_q=max_q, r_pad=r_pad)
+    else:
+        counts = contingency_counts_pallas(
+            cfg_p, child_p, max_q=max_q, r_pad=r_pad, tile_m=tile_m,
+            interpret=interpret)
+    return counts[:, :r_max]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the bdeu_count kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def contingency_counts_ref(
+    cfg: jax.Array, child: jax.Array, *, max_q: int, r_pad: int
+) -> jax.Array:
+    """Dense (max_q, r_pad) contingency counts; out-of-range cfg rows ignored."""
+    valid = (cfg >= 0) & (cfg < max_q)
+    flat = jnp.where(valid, cfg, 0) * r_pad + jnp.clip(child, 0, r_pad - 1)
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.float32), flat, num_segments=max_q * r_pad
+    )
+    return counts.reshape(max_q, r_pad)

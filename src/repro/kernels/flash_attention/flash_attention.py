@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: blocked causal flash attention with GQA.
+
+Online-softmax attention tiled for VMEM: the query block plus one KV block
+live in VMEM at a time; running max / normalizer / accumulator persist in
+VMEM scratch across the (sequential) KV grid dimension.
+
+Grid:      (B, Hq, T//BQ, S//BK) — KV block index innermost (sequential).
+BlockSpec: q/out (1, 1, BQ, D); k/v (1, 1, BK, D) with the head index mapped
+           through h // (Hq // Hkv) — GQA sharing without materializing
+           repeated KV.
+Scratch:   acc (BQ, D) f32, m/l (BQ, 128) f32 (lane-padded running stats).
+
+Used for train/prefill (square or rectangular T x S).  Decode (T == 1) is
+intentionally left to XLA — a single-row gather-dominated contraction is
+memory-bound and fuses well without a custom kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int,
+            seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Skip fully-masked KV blocks under causality.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                           # (BQ, 1)
+        m_cur = s.max(axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)                  # (BQ, 1)
+        l_new = corr * l_ref[:, :1] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, scale: float | None = None,
+    block_q: int = 128, block_k: int = 128, interpret: bool = True,
+) -> jax.Array:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0.
+
+    T % block_q == 0 and S % block_k == 0 (ops.py pads).
+    """
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    grid = (b, hq, t // block_q, s // block_k)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, seq_k=s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

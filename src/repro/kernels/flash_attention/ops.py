@@ -1,0 +1,52 @@
+"""Jit'd public wrapper for the flash attention Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret",
+                                   "use_ref"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, block_q: int = 128, block_k: int = 128,
+    interpret: bool = True, use_ref: bool = False,
+) -> jax.Array:
+    """Blocked attention with automatic seq padding.
+
+    Padding correctness: padded KV columns receive -inf logits only via the
+    causal mask when they sit beyond real rows; for the non-causal case we
+    mask them explicitly by padding K with +inf-free zeros and masking in the
+    kernel is unnecessary because padded q rows are sliced away and padded k
+    rows would perturb softmax — so here we require exact multiples for
+    non-causal and pad only causal inputs (padded kv sits after all real
+    queries and is never attended).
+    """
+    if use_ref:
+        return attention_ref(q, k, v, causal=causal)
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    bq = min(block_q, _round_up(t, 8))
+    bk = min(block_k, _round_up(s, 8))
+    t_pad = _round_up(t, bq)
+    s_pad = _round_up(s, bk)
+    if (t_pad != t or s_pad != s) and not causal:
+        raise ValueError("non-causal path requires block-aligned seq lens")
+    if causal and t != s:
+        raise ValueError("causal flash kernel is for square self-attention "
+                         "(prefill/train); decode uses the XLA path")
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :, :t, :]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (GQA + causal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, s), dtype=bool), k=s - t)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import ssd_scan
+from .ref import ssd_scan_ref, ssd_final_state_ref
+from .ssd_scan import ssd_scan_pallas

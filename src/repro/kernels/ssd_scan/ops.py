@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the SSD scan Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+from .ref import ssd_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret", "use_ref"))
+def ssd_scan(
+    x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+    *, chunk: int = 128, interpret: bool = True, use_ref: bool = False,
+) -> jax.Array:
+    """Chunked SSD scan with automatic T padding.
+
+    Padding is appended with a = 0 (decay 1) and B = 0, so padded steps
+    neither write state nor emit real outputs; padded rows are sliced off.
+    """
+    if use_ref:
+        return ssd_scan_ref(x, a, b, c)
+    bsz, h, t, p = x.shape
+    t_pad = ((t + chunk - 1) // chunk) * chunk
+    if t_pad != t:
+        pad = ((0, 0), (0, 0), (0, t_pad - t), (0, 0))
+        x = jnp.pad(x, pad)
+        b = jnp.pad(b, pad)
+        c = jnp.pad(c, pad)
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, t_pad - t)))
+    out = ssd_scan_pallas(x, a, b, c, chunk=chunk, interpret=interpret)
+    return out[:, :, :t, :]

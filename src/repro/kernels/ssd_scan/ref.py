@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the SSD scan: the literal per-step recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, a, b, c):
+    """x: (B, H, T, P), a: (B, H, T) log-decay, b/c: (B, H, T, N).
+
+    S_t = exp(a_t) S_{t-1} + B_t x_t^T ;  y_t = C_t^T S_t.
+    """
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        xt, at, bt, ct = s_inp = inp
+        s = jnp.exp(at)[..., None, None] * s + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 2, 0))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)
+
+
+def ssd_final_state_ref(x, a, b, c):
+    """Final (B, H, N, P) state — used to cross-check chunk stitching."""
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        xt, at, bt = inp
+        return jnp.exp(at)[..., None, None] * s + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt), None
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 2, 0))
+    s, _ = jax.lax.scan(step, s0, xs)
+    return s

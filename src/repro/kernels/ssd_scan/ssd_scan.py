@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+Recurrence (per batch b, head h; state S in R^{N x P}):
+
+    S_t = exp(a_t) * S_{t-1} + B_t x_t^T          a_t: log-decay scalar
+    y_t = C_t^T S_t
+
+The SSD insight (Dao & Gu 2024): split the sequence into chunks of length Q.
+Within a chunk the output is an attention-like quadratic form with a causal
+decay mask; across chunks only the (N, P) state is carried:
+
+    cs_i           = cumsum(a)_i                      (inclusive, per chunk)
+    y_intra        = ((C B^T) o L) X,   L[i,j] = exp(cs_i - cs_j) [i >= j]
+    y_inter[i]     = exp(cs_i) * C_i S_prev
+    S_new          = exp(cs_last) S_prev + sum_j exp(cs_last - cs_j) B_j x_j^T
+
+TPU mapping: grid (B, H, T//Q), chunk index innermost & sequential; the
+(N, P) running state lives in VMEM scratch; each grid step does three
+MXU contractions ((Q,N)@(N,Q), (Q,Q)@(Q,P), (N,Q)@(Q,P)) — arithmetic
+intensity scales with Q, chosen so all chunk tensors fit VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    a = a_ref[0, 0].astype(jnp.float32)      # (Q,)
+    bmat = b_ref[0, 0].astype(jnp.float32)   # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)   # (Q, N)
+
+    cs = jnp.cumsum(a)                       # (Q,) inclusive
+    # L[i, j] = exp(cs_i - cs_j) for i >= j else 0
+    li = cs[:, None] - cs[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mask = rows >= cols
+    l_decay = jnp.where(l_mask, jnp.exp(jnp.where(l_mask, li, 0.0)), 0.0)
+
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y_intra = jax.lax.dot_general(cb * l_decay, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q, P)
+
+    s_prev = state_ref[...]                  # (N, P)
+    y_inter = jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        cmat, s_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (Q, P)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    w = jnp.exp(cs[-1] - cs)[:, None] * bmat          # (Q, N)
+    state_ref[...] = jnp.exp(cs[-1]) * s_prev + jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (N, P)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,      # (B, H, T, P)
+    a: jax.Array,      # (B, H, T) log-decay
+    b: jax.Array,      # (B, H, T, N)
+    c: jax.Array,      # (B, H, T, N)
+    *, chunk: int = 128, interpret: bool = True,
+) -> jax.Array:
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    grid = (bsz, h, t // chunk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, ic: (i, j, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda i, j, ic: (i, j, ic)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, ic: (i, j, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, ic: (i, j, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda i, j, ic: (i, j, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)

@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first init.
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+the production meshes, record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_7b --shape train_4k --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/results/dryrun.jsonl
+
+Each invocation appends one JSON line per cell (run cells in separate
+processes for fault isolation — benchmarks/sweep_dryrun.sh does this).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import common as cc
+from ..launch import specs as sp
+from ..launch.mesh import make_production_mesh
+from ..launch.roofline import collective_bytes, model_flops, roofline_terms
+from ..models import transformer
+from ..training.step import build_train_step
+from ..serving.step import build_prefill_step, build_serve_step
+
+
+def _cost_get(costs, key, default=0.0):
+    try:
+        v = costs.get(key, default)
+        return float(v)
+    except Exception:
+        return default
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(ma, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # some backends lack memory_analysis
+        return {"error": repr(e)}
+
+
+def _lower_compile(cfg, shape, mesh) -> dict:
+    """Lower+compile one program; return its per-chip counts."""
+    params_shape = sp.abstract_params(cfg)
+    pshard = sp.param_shardings(cfg, mesh, params_shape)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_shape = sp.abstract_opt(params_shape)
+        oshard = sp.opt_shardings(cfg, mesh, params_shape)
+        batch = sp.batch_specs(cfg, shape, "train")
+        bshard = sp.batch_shard_tree(batch, mesh, cfg)
+        step = build_train_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+    elif shape.kind == "prefill":
+        batch = sp.batch_specs(cfg, shape, "prefill")
+        bshard = sp.batch_shard_tree(batch, mesh, cfg)
+        step = build_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=None)
+        with mesh:
+            lowered = jitted.lower(params_shape, batch)
+    else:  # decode
+        cache_shape = sp.abstract_cache(cfg, shape.global_batch,
+                                        shape.seq_len)
+        shard_seq = shape.global_batch == 1      # long-context: seq-parallel
+        cshard = sp.cache_shardings(cfg, mesh, cache_shape, shard_seq)
+        tokens = sp.sds((shape.global_batch, 1), jnp.int32)
+        tshard = sp.batch_shard_tree({"tokens": tokens}, mesh, cfg)["tokens"]
+        pos = sp.sds((), jnp.int32)
+        step = build_serve_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, cshard, tshard,
+                                       NamedSharding(mesh, P())),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(params_shape, cache_shape, tokens, pos)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    costs = compiled.cost_analysis()
+    if isinstance(costs, (list, tuple)):
+        costs = costs[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": _cost_get(costs, "flops"),
+        "hbm_bytes": _cost_get(costs, "bytes accessed"),
+        "coll_bytes": coll["total"],
+        "collectives": {k: v for k, v in coll.items() if v},
+        "memory": _memory_analysis_dict(compiled),
+        "seconds_lower": round(t_lower, 2),
+        "seconds_compile": round(t_compile, 2),
+    }
+
+
+def _lin(c1: dict, c2: dict, w: float) -> dict:
+    """c1 + w * (c2 - c1) on the numeric count fields."""
+    keys = ("flops", "hbm_bytes", "coll_bytes")
+    return {k: c1[k] + w * (c2[k] - c1[k]) for k in keys}
+
+
+def _add(c1: dict, c2: dict, w: float = 1.0) -> dict:
+    keys = ("flops", "hbm_bytes", "coll_bytes")
+    return {k: c1.get(k, 0.0) + w * c2.get(k, 0.0) for k in keys}
+
+
+def extrapolated_counts(cfg, shape, mesh) -> dict:
+    """Exact per-chip counts via unrolled depth-1/2 programs.
+
+    XLA's HLO cost analysis counts a while/scan body ONCE (not x trip count),
+    so the scanned full-depth program under-reports flops/bytes/collectives
+    by ~L.  We therefore lower unrolled (scan_layers=False) depth-1 and
+    depth-2 variants of the SAME program with the SAME shardings: the
+    depth-2 minus depth-1 delta is one exact mid-stack layer (fwd+bwd+its
+    optimizer slice+its collectives), and
+
+        total = depth1 + (L - 1) * delta
+
+    Whisper (enc+dec) and Zamba (mamba backbone + shared attention block at
+    13 depths) extrapolate each component separately.
+    """
+    import dataclasses as dc
+    rep = lambda **kw: dc.replace(cfg, scan_layers=False, **kw)
+
+    if cfg.enc_dec:
+        c11 = _lower_compile(rep(n_layers=1, n_encoder_layers=1), shape, mesh)
+        c21 = _lower_compile(rep(n_layers=2, n_encoder_layers=1), shape, mesh)
+        c12 = _lower_compile(rep(n_layers=1, n_encoder_layers=2), shape, mesh)
+        tot = _lin(c11, c21, float(cfg.n_layers - 1) + 1.0)
+        tot = _add(tot, _add(c12, c11, -1.0),
+                   float(cfg.n_encoder_layers - 1))
+        return tot
+    if cfg.block_pattern == "zamba_hybrid":
+        big = 10 ** 6
+        c1 = _lower_compile(rep(n_layers=1, hybrid_attn_every=big),
+                            shape, mesh)
+        c2 = _lower_compile(rep(n_layers=2, hybrid_attn_every=big),
+                            shape, mesh)
+        c2a = _lower_compile(rep(n_layers=2, hybrid_attn_every=2),
+                             shape, mesh)
+        n_attn = cfg.n_layers // cfg.hybrid_attn_every
+        tot = _lin(c1, c2, float(cfg.n_layers - 1))
+        tot = _add(tot, _add(c2a, c2, -1.0), float(n_attn))
+        return tot
+    c1 = _lower_compile(rep(n_layers=1), shape, mesh)
+    c2 = _lower_compile(rep(n_layers=2), shape, mesh)
+    return _lin(c1, c2, float(cfg.n_layers - 1))
+
+
+# ---------------------------------------------------------------------------
+# The paper's own program on the production mesh: cGES ring
+# ---------------------------------------------------------------------------
+
+# (n, m, r_max) of the paper's three bnlearn domains (Table 1)
+RING_DOMAINS = {
+    "link_724": (724, 5000, 4),
+    "pigs_441": (441, 5000, 3),
+    "munin_1041": (1041, 5000, 5),
+}
+
+
+def run_ring_cell(domain: str, mesh_kind: str,
+                  overrides: dict | None = None) -> dict:
+    """Lower+compile cGES stage 2 (the shard_map ring) on the production
+    mesh: ring processes over the 'data' axis (x'pod' multi-pod), scoring-TP
+    over the 'model' axis inside each process.
+
+    Roofline caveat (recorded): the ring is a while_loop program, so HLO
+    cost analysis counts ONE round with ONE insert + ONE delete — the
+    numbers below are per-round lower bounds, not per-run totals.
+    """
+    from ..core.ges import GESConfig
+    from ..core.ring import RingSpec, build_ring_program
+    from ..core.cges import edge_add_limit
+
+    rec = {"arch": "cges_ring", "shape": domain, "mesh": mesh_kind,
+           "ok": False}
+    n, m, r_max = RING_DOMAINS[domain]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod2"))
+    ring_axis = ("pod", "data") if mesh_kind == "pod2" else "data"
+    k = 32 if mesh_kind == "pod2" else 16
+
+    ges_kw = dict(max_q=4096, counts_impl="segment", child_chunk=4,
+                  max_parents=6)
+    if overrides:
+        ges_kw.update({k: v for k, v in overrides.items() if k in ges_kw})
+        rec["overrides"] = overrides
+    cfg = GESConfig(**ges_kw)
+    spec = RingSpec(k=k, axis=ring_axis, max_rounds=16,
+                    axis_model="model", axis_model_size=16)
+    prog = build_ring_program(mesh, spec, cfg, r_max,
+                              edge_add_limit(n, k))
+
+    data = sp.sds((m, n), jnp.int32)
+    arities = sp.sds((n,), jnp.int32)
+    masks = sp.sds((k, n, n), jnp.int8)
+    graphs0 = sp.sds((k, n, n), jnp.int8)
+
+    t0 = time.time()
+    with mesh:
+        lowered = prog.lower(data, arities, masks, graphs0)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    costs = compiled.cost_analysis()
+    if isinstance(costs, (list, tuple)):
+        costs = costs[0]
+    coll = collective_bytes(compiled.as_text())
+    flops = _cost_get(costs, "flops")
+    hbm = _cost_get(costs, "bytes accessed")
+    terms = roofline_terms(flops, hbm, coll["total"])
+    rec.update(
+        ok=True, chips=mesh.devices.size, ring_k=k,
+        seconds_lower=round(t_lower, 2),
+        seconds_compile=round(t_compile, 2),
+        flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+        collective_bytes_per_chip=coll["total"],
+        collectives_full_hlo={kk: v for kk, v in coll.items() if v},
+        memory=_memory_analysis_dict(compiled),
+        note="per-round lower bound: while_loop body counted once",
+        **terms,
+    )
+    return rec
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for kv in pairs or ():
+        k, v = kv.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True, skip_extrap: bool = False,
+             overrides: dict | None = None) -> dict:
+    if arch == "cges_ring":
+        return run_ring_cell(shape_name, mesh_kind, overrides=overrides)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "ok": False}
+    skip = cc.shape_applicable(arch, shape_name)
+    if skip:
+        rec.update(ok=True, skipped=True, reason=skip)
+        return rec
+
+    shape = cc.SHAPES[shape_name]
+    cfg = cc.get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+        rec["overrides"] = overrides
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod2"))
+    n_chips = mesh.devices.size
+
+    # 1) the deliverable: full-depth scanned program must lower+compile
+    full = _lower_compile(cfg, shape, mesh)
+    if verbose:
+        print(f"[{arch}/{shape_name}/{mesh_kind}] memory:", full["memory"])
+
+    rec.update(
+        ok=True, chips=n_chips,
+        seconds_lower=full["seconds_lower"],
+        seconds_compile=full["seconds_compile"],
+        memory=full["memory"],
+        collectives_full_hlo=full["collectives"],
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+    )
+
+    # 2) roofline terms from unrolled depth-1/2 extrapolation
+    if not skip_extrap:
+        ext = extrapolated_counts(cfg, shape, mesh)
+        n_tokens = (shape.global_batch * shape.seq_len
+                    if shape.kind != "decode" else shape.global_batch)
+        mf_global = model_flops(cfg, shape.kind, n_tokens)
+        mf_per_chip = mf_global / n_chips
+        terms = roofline_terms(ext["flops"], ext["hbm_bytes"],
+                               ext["coll_bytes"], useful_flops=mf_per_chip)
+        rec.update(
+            flops_per_chip=ext["flops"],
+            hbm_bytes_per_chip=ext["hbm_bytes"],
+            collective_bytes_per_chip=ext["coll_bytes"],
+            model_flops_global=mf_global,
+            model_flops_per_chip=mf_per_chip,
+            useful_flops_ratio=(mf_per_chip / ext["flops"]
+                                if ext["flops"] else 0.0),
+            **terms,
+        )
+    return rec
+
+
+def iter_cells(meshes):
+    for arch in cc.ARCH_IDS:
+        for shape in cc.SHAPES:
+            for mk in meshes:
+                yield arch, shape, mk
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-extrap", action="store_true",
+                    help="compile-only (multi-pod cells: roofline table is "
+                         "single-pod per the brief)")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    help="config override key=value (perf variants; "
+                         "recorded in the output line)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = (list(iter_cells(["pod1", "pod2"])) if args.all
+             else [(args.arch, args.shape, args.mesh)])
+    ok = True
+    for arch, shape, mk in cells:
+        try:
+            rec = run_cell(arch, shape, mk,
+                           skip_extrap=args.skip_extrap or mk == "pod2",
+                           overrides=_parse_overrides(args.overrides))
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mk, "ok": False,
+                   "error": repr(e),
+                   "traceback": traceback.format_exc()[-2000:]}
+            ok = False
+        line = json.dumps(rec)
+        print(line[:400] + ("..." if len(line) > 400 else ""))
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

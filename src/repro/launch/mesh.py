@@ -1,0 +1,32 @@
+"""Production meshes.  A FUNCTION (not module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) 'data' x 'model' single-pod (256 chips, TPU v5e pod) or
+    (2, 16, 16) 'pod' x 'data' x 'model' (512 chips, 2 pods).
+
+    Requires enough devices (the dry-run forces 512 host devices via
+    XLA_FLAGS *before* jax init); uses the first prod(shape) of them.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"production mesh needs {n} devices, have {len(devs)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import (launch/dryrun.py does this)")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n], dtype=object).reshape(shape), axes)
+
+
+def make_host_mesh(k: int = 1, axis: str = "ring"):
+    """k-device 1-axis mesh from whatever devices exist (tests / cGES ring)."""
+    devs = jax.devices()[:k]
+    return jax.sharding.Mesh(np.asarray(devs, dtype=object).reshape(k), (axis,))

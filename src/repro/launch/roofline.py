@@ -1,0 +1,99 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(constants per the brief).  The compiled module is the PER-DEVICE (SPMD)
+program, so HLO flops/bytes from ``cost_analysis`` and collective payload
+shapes parsed from the HLO text are already per-chip quantities:
+
+    compute_s    = flops_per_chip / PEAK_FLOPS
+    memory_s     = hbm_bytes_per_chip / HBM_BW
+    collective_s = link_bytes_per_chip / ICI_BW
+
+Collective link bytes: sum over collective instructions of the payload
+(largest shape in the instruction), x2 for all-reduce (reduce-scatter +
+all-gather decomposition of a ring AR moves 2x the shard bytes per chip).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip link bytes by collective kind, parsed from HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        # instruction lines look like: '%x = bf16[...] all-reduce(bf16[...] %y), ...'
+        m = re.search(r"=\s+[a-z0-9]+\[[0-9,]*\][^\s]*\s+([a-z\-]+)", ls)
+        if not m:
+            # tuple-result collectives: '%x = (f32[..], f32[..]) all-reduce(...)'
+            m = re.search(r"=\s+\([^)]*\)\s+([a-z\-]+)", ls)
+        if not m or m.group(1) not in _COLLECTIVES:
+            continue
+        kind = m.group(1)
+        if f" {kind}(" not in ls and not ls.startswith(f"{kind}("):
+            continue
+        payload = max((_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(ls)),
+                      default=0)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += factor * payload
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, link_bytes: float,
+                   useful_flops: float = 0.0) -> Dict[str, float]:
+    """Three roofline terms + the dominant bound.
+
+    ``roofline_fraction`` = (useful MODEL_FLOPS time) / (roofline bound):
+    a perfectly-overlapped step takes max(terms) seconds; the fraction of
+    that bound spent on *useful* model flops is the score we hillclimb.
+    (Using HLO flops here would score compute-bound-but-wasteful programs
+    as 1.0 — redundant compute must not count as useful.)
+    """
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": link_bytes / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    useful_s = (useful_flops or flops) / PEAK_FLOPS
+    terms["roofline_fraction"] = (useful_s / bound) if bound else 0.0
+    return terms
+
+
+def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D forward-only, N = active."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * n_tokens

@@ -1,0 +1,158 @@
+"""Batched serving driver: slot-based continuous batching over the decode
+step (the production shape of `decode_32k`: many sequences, one new token
+per step, KV/SSM caches resident).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --smoke \
+        --slots 4 --max-new 24
+
+Design (scales to the pod path unchanged):
+* a fixed pool of B cache slots (static shapes — one compiled step);
+* each incoming request claims a free slot, prefill writes its KV rows via
+  the same decode step replayed over the prompt (slot-local positions);
+* every engine step decodes ALL active slots in one batched `serve_step`
+  call; finished slots are freed and immediately reusable — arrival order
+  never forces padding restarts;
+* per-slot position vector instead of a global scalar: the step is
+  batch-position-aware exactly as a production server needs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config
+from ..models import transformer
+
+
+def build_slot_serve_step(cfg):
+    """Decode step with PER-SLOT positions: tokens (B, 1), pos (B,).
+
+    `transformer.decode_step` takes a scalar fill position; continuous
+    batching needs each slot at its own position, so we vmap the step over
+    the cache's batch axis — each lane decodes its slot against its own
+    cache row with its own scalar pos.  One compiled program, batch-parallel
+    on device, exact per-slot causal windows.
+    """
+    cache_axes = {"k": 1, "v": 1, "xk": 1, "xv": 1, "attn_k": 1, "attn_v": 1,
+                  "ssm": 1, "conv": 1}
+
+    def one(params, cache_b, tok, p):
+        # vmap stripped the batch axis from the cache leaves; decode_step
+        # expects (L, B, ...) — run the lane at B=1 and strip back after.
+        cache1 = jax.tree.map(lambda x: x[:, None], cache_b)
+        logits, new_cache = transformer.decode_step(
+            cfg, params, cache1, tok[None], p)
+        new_cache = jax.tree.map(lambda x: x[:, 0], new_cache)
+        return logits[0, -1, :], new_cache
+
+    def step(params, cache, tokens, pos):
+        axes = {k: v for k, v in cache_axes.items() if k in cache}
+        logits, new_cache = jax.vmap(
+            one, in_axes=(None, axes, 0, 0), out_axes=(0, axes),
+        )(params, cache, tokens, pos)
+        return logits, new_cache
+
+    return step
+
+
+class ServeEngine:
+    """Slot-pool engine around one jitted batched decode step."""
+
+    def __init__(self, cfg, params, n_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = transformer.init_cache(cfg, n_slots, max_seq)
+        self.pos = np.zeros(n_slots, dtype=np.int32)
+        self.active: List[Optional[dict]] = [None] * n_slots
+        self._step = jax.jit(build_slot_serve_step(cfg))
+
+    def submit(self, prompt: np.ndarray) -> Optional[int]:
+        """Claim a slot and prefill it token-by-token (slot-local replay)."""
+        try:
+            slot = self.active.index(None)
+        except ValueError:
+            return None
+        self.active[slot] = {"generated": [], "done": False}
+        # prefill: replay prompt through the decode step for this slot only;
+        # other slots decode a no-op token at their own positions (masked
+        # out of their generated streams).
+        for t in prompt:
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            tokens[slot, 0] = t
+            self._advance(tokens, collect=False, only_slot=slot)
+        return slot
+
+    def _advance(self, tokens: np.ndarray, collect: bool = True,
+                 only_slot: Optional[int] = None):
+        # single compiled step for the whole pool: scalar pos per step is the
+        # max; per-slot correctness comes from each slot's causal window
+        # ending at its own fill position (positions vector).
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens), pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        for s in range(self.n_slots):
+            if only_slot is not None and s != only_slot:
+                continue
+            if self.active[s] is None:
+                continue
+            self.pos[s] += 1
+            if collect:
+                self.active[s]["generated"].append(int(nxt[s]))
+        return nxt
+
+    def step_all(self, last_tokens: np.ndarray):
+        return self._advance(last_tokens.reshape(self.n_slots, 1))
+
+    def free(self, slot: int):
+        self.active[slot] = None
+        self.pos[slot] = 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    eng = ServeEngine(cfg, params, args.slots, args.max_seq)
+
+    rng = np.random.default_rng(0)
+    pending = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10))
+               .astype(np.int32) for _ in range(args.requests)]
+    done = 0
+    t0 = time.time()
+    last = np.zeros(args.slots, np.int32)
+    while done < args.requests or any(a is not None for a in eng.active):
+        while pending and None in eng.active:
+            eng.submit(pending.pop(0))
+        nxt = eng.step_all(last)
+        last = nxt
+        for s, a in enumerate(eng.active):
+            if a and len(a["generated"]) >= args.max_new:
+                print(f"slot {s}: {a['generated'][:8]}... "
+                      f"({len(a['generated'])} tokens)")
+                eng.free(s)
+                done += 1
+    dt = time.time() - t0
+    total = args.requests * args.max_new
+    print(f"served {args.requests} requests / {total} tokens "
+          f"in {dt:.1f}s ({total / dt:.1f} tok/s on CPU smoke)")
+
+
+if __name__ == "__main__":
+    main()

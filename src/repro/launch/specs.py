@@ -1,0 +1,98 @@
+"""Abstract input specs (ShapeDtypeStruct) + sharding trees for every
+(arch x shape) cell — the dry-run's stand-ins; no device allocation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import sharding as shd
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..configs.common import ShapeSpec
+from ..training.optimizer import init_opt_state
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, kind: str):
+    """(abstract_batch, partition_spec_tree) for train/prefill batches."""
+    b, t = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, t), jnp.int32)}
+    if kind == "train":
+        batch["labels"] = sds((b, t), jnp.int32)
+    if cfg.enc_dec:
+        batch["frames"] = sds((b, cfg.frontend_tokens, cfg.frontend_dim),
+                              jnp.bfloat16)
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def batch_shard_tree(batch, mesh: Mesh, cfg: ModelConfig | None = None):
+    axes = shd.dp_axes(mesh)
+    # TP-less archs: fold 'model' into the batch axes when divisible, so the
+    # model axis does useful (not redundant) work (§Perf iteration 4)
+    if cfg is not None and getattr(cfg, "dp_over_model", False) \
+            and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+
+    def size_of(ax):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+
+    def spec_for(leaf):
+        ax = axes
+        while ax and (not leaf.shape or leaf.shape[0] % size_of(ax)):
+            ax = ax[:-1]                      # drop axes until divisible
+        if ax and leaf.shape:
+            return P(ax, *(None,) * (len(leaf.shape) - 1))
+        return P(*(None,) * len(leaf.shape))
+
+    return jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), batch)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in shd.dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        partial(transformer.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt(params_shape):
+    return jax.eval_shape(init_opt_state, params_shape)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int):
+    return jax.eval_shape(
+        partial(transformer.init_cache, cfg, batch, seq))
+
+
+def param_shardings(cfg, mesh, params_shape):
+    return shd.to_named(mesh, shd.param_specs(cfg, mesh, params_shape))
+
+
+def opt_shardings(cfg, mesh, params_shape):
+    mspec = shd.opt_specs(cfg, mesh, params_shape)
+    return {"m": shd.to_named(mesh, mspec),
+            "v": shd.to_named(mesh, mspec),
+            "count": NamedSharding(mesh, P())}
+
+
+def cache_shardings(cfg, mesh, cache_shape, shard_seq: bool):
+    return shd.to_named(
+        mesh, shd.cache_specs(cfg, mesh, cache_shape, shard_seq=shard_seq))

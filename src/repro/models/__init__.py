@@ -1,0 +1,2 @@
+from .config import ModelConfig, MoEConfig, SSMConfig
+from . import layers, sharding, ssd, transformer

@@ -1,0 +1,170 @@
+"""Unified model configuration covering all assigned architecture families:
+dense / MoE / SSM (Mamba2) / hybrid (Zamba2) / enc-dec (Whisper) / VLM (LLaVA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    n_experts_pad: int = 0        # pad expert dim for EP divisibility; padded
+                                  # experts are router-masked (never routed to)
+
+    @property
+    def experts_pad(self) -> int:
+        return self.n_experts_pad or self.n_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64        # N
+    head_dim: int = 64         # P
+    expansion: int = 2         # d_inner = expansion * d_model
+    conv_width: int = 4
+
+    def n_heads(self, d_model: int) -> int:
+        return (self.expansion * d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention stack (None for attention-free archs)
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    act: str = "swiglu"              # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # family switches
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    block_pattern: str = "attn"      # attn | mamba | zamba_hybrid
+    hybrid_attn_every: int = 6       # zamba: shared attn block cadence
+    enc_dec: bool = False            # whisper
+    n_encoder_layers: int = 0
+    frontend: str = "none"           # none | audio_stub | vision_stub
+    frontend_tokens: int = 0         # stub sequence length contributed
+    frontend_dim: int = 0            # stub embedding input dim
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    logit_softcap: float = 0.0       # grok/gemma-style final-logit softcap
+    # TP padding (set by configs/common.for_mesh): padded head counts make
+    # head-sharding divisible by the model-axis size; padded slots are
+    # zero-masked at init so outputs are exactly those of the true arch.
+    n_heads_pad: int = 0             # 0 -> use n_heads
+    n_kv_pad: int = 0                # 0 -> use n_kv_heads
+    vocab_pad_to: int = 256          # embedding rows rounded up to this
+    zero_stage: int = 1              # 0: replicate opt state; 1: shard over data
+    fsdp_params: bool = False        # grok-scale: 2D (data, model) weight shard
+    fsdp_gather_weights: bool = True # explicit per-use weight gather (ZeRO-3):
+                                     # without it GSPMD all-gathers activations
+                                     # (orders of magnitude larger) instead
+    tp_size: int = 16                # model-axis size the config was padded for
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # implementation switches
+    attn_impl: str = "chunked"       # dense | chunked | pallas
+    attn_chunk: int = 1024
+    moe_group_size: int = 0          # tokens per dispatch group (0 = all):
+                                     # dense dispatch einsums cost O(T*E*C*d)
+                                     # = O(T^2) — grouping caps it at
+                                     # O(T*S*k*d) (Switch-style group capacity)
+    dp_over_model: bool = False      # TP-less archs (mamba2-130m): shard the
+                                     # batch over 'model' too — otherwise all
+                                     # 16 model-axis devices compute identical
+                                     # work (15/16 of the pod wasted)
+    ssd_chunk: int = 256
+    remat: bool = True
+    scan_layers: bool = True
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def heads_pad(self) -> int:
+        return self.n_heads_pad or self.n_heads
+
+    @property
+    def kv_pad(self) -> int:
+        return self.n_kv_pad or self.n_kv_heads
+
+    @property
+    def vocab_pad(self) -> int:
+        t = self.vocab_pad_to
+        return ((self.vocab + t - 1) // t) * t
+
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (excludes tiny norm scales' impact)."""
+        c = self
+        emb = c.vocab * c.d_model
+        out = 0 if c.tie_embeddings else c.vocab * c.d_model
+        if c.block_pattern == "attn":
+            body = (self._attn_params() + self._mlp_params()) * c.n_layers
+        elif c.block_pattern == "mamba":
+            body = self._mamba_params() * c.n_layers
+        else:  # zamba_hybrid: every layer is mamba + ONE shared attn block
+            body = self._mamba_params() * c.n_layers + (
+                self._attn_params() + self._mlp_params())
+        if c.enc_dec:
+            enc = (self._attn_params() + self._mlp_params()) * c.n_encoder_layers
+            dec_cross = c.n_layers * self._attn_params()
+            body += enc + dec_cross
+        return emb + out + body
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        c = self
+        full_mlp = self._mlp_params()
+        active_mlp = full_mlp * c.moe.top_k // c.moe.n_experts
+        body_delta = (full_mlp - active_mlp) * c.n_layers
+        return self.param_count() - body_delta
+
+    def _attn_params(self) -> int:
+        c = self
+        q = c.d_model * c.n_heads * c.head_dim
+        kv = 2 * c.d_model * c.n_kv_heads * c.head_dim
+        o = c.n_heads * c.head_dim * c.d_model
+        bias = (c.n_heads + 2 * c.n_kv_heads) * c.head_dim if c.qkv_bias else 0
+        return q + kv + o + bias
+
+    def _mlp_params(self) -> int:
+        c = self
+        gates = 3 if c.act in ("swiglu", "geglu") else 2
+        one_expert = gates * c.d_model * c.d_ff
+        if c.moe is not None:
+            return one_expert * c.moe.n_experts + c.d_model * c.moe.n_experts
+        return one_expert
+
+    def _mamba_params(self) -> int:
+        c = self
+        s = c.ssm
+        d_in = s.expansion * c.d_model
+        h = s.n_heads(c.d_model)
+        # in_proj produces [x, z, B, C, dt]: d_in + d_in + N + N + h
+        in_proj = c.d_model * (2 * d_in + 2 * s.state_dim + h)
+        conv = s.conv_width * d_in
+        out_proj = d_in * c.d_model
+        return in_proj + conv + out_proj + 2 * h  # + A, D per head

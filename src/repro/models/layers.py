@@ -1,0 +1,372 @@
+"""Neural building blocks (pure functional: init_* returns param pytrees,
+apply functions take them explicitly).  All matmul-bearing layers carry
+logical sharding hints through ``sharding.py`` spec trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fsdp_full(cfg, p: dict, name: str) -> Array:
+    """Explicit ZeRO-3 weight gather (FSDP archs only, e.g. grok-314B).
+
+    Weights enter the step 2D-sharded (d_model over 'data' x TP over
+    'model').  Left to itself, GSPMD resolves the d_model contraction by
+    all-gathering the *activations* over 'data' (32 GiB f32/layer at grok
+    train_4k) and all-reducing partial sums — ~20x the traffic of gathering
+    the *weight* shard (3.2 GiB bf16/layer).  Constraining the weight to its
+    model-only spec at point-of-use forces the weight gather; its transpose
+    in backward is the grad reduce-scatter — textbook ZeRO-3.
+    (EXPERIMENTS.md §Perf iteration 2.)
+    """
+    w = p[name]
+    if not getattr(cfg, "fsdp_params", False) \
+            or not getattr(cfg, "fsdp_gather_weights", True):
+        return w
+    from jax.sharding import PartitionSpec as P
+    tp = cfg.tp_size
+    div = lambda d: d % tp == 0
+
+    if name in ("w_up", "w_gate"):
+        spec = (P(None, None, "model" if div(w.shape[-1]) else None)
+                if w.ndim >= 3 else P(None, "model" if div(w.shape[-1])
+                                      else None))
+    elif name == "w_down":
+        spec = (P(None, "model" if div(w.shape[-2]) else None, None)
+                if w.ndim >= 3 else P("model" if div(w.shape[-2]) else None,
+                                      None))
+    elif name == "wq":
+        spec = P(None, "model" if div(w.shape[-2]) else None, None)
+    elif name in ("wk", "wv"):
+        spec = P(None, "model" if div(w.shape[-2]) else None, None)
+    elif name == "wo":
+        spec = P("model" if div(w.shape[-3]) else None, None, None)
+    elif name == "embed":
+        spec = P("model" if div(w.shape[0]) else None, None)
+    elif name == "lm_head":
+        spec = P(None, "model" if div(w.shape[-1]) else None)
+    else:
+        return w
+    if w.ndim > len(spec):           # scanned stack: leading L dim
+        spec = P(*((None,) * (w.ndim - len(spec)) + tuple(spec)))
+    return jax.lax.with_sharding_constraint(w, spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, D) ; positions: (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — three implementations with identical semantics
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> dict:
+    """Head-padded attention params (TP divisibility): the padded Q and O
+    slots are zeroed, so padded heads contribute exactly 0 to the output and
+    the model is numerically the true architecture."""
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.heads_pad, cfg.kv_pad
+    h_true, kv_true = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    # Padding layout is PER KV GROUP (GQA maps flat head i -> kv group
+    # i // (h/kv)): each group's first g_true slots are real, the rest are
+    # zero — so real heads keep their true kv group under padding.
+    g_pad = h // max(kv_true, 1)
+    g_true = h_true // max(kv_true, 1)
+    hmask = ((jnp.arange(h) % max(g_pad, 1)) < g_true)[None, :, None]
+    kvmask = (jnp.arange(kv) < kv_true)[None, :, None]
+    p = {
+        "wq": jax.random.normal(k1, (d, h, hd), cfg.pdtype()) * std * hmask,
+        "wk": jax.random.normal(k2, (d, kv, hd), cfg.pdtype()) * std * kvmask,
+        "wv": jax.random.normal(k3, (d, kv, hd), cfg.pdtype()) * std * kvmask,
+        "wo": jax.random.normal(k4, (h, hd, d), cfg.pdtype())
+              * (h_true * hd) ** -0.5 * hmask.reshape(h, 1, 1),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), cfg.pdtype())
+        p["bk"] = jnp.zeros((kv, hd), cfg.pdtype())
+        p["bv"] = jnp.zeros((kv, hd), cfg.pdtype())
+    return p
+
+
+def _dense_attention(q, k, v, causal: bool, q_offset) -> Array:
+    """q: (B, T, H, D), k/v: (B, S, KV, D) -> (B, T, H, D)."""
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, t, kv, group, d)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        rows = q_offset + jnp.arange(t)[:, None]
+        cols = jnp.arange(s)[None, :]
+        logits = jnp.where((cols <= rows)[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, causal: bool, q_offset, chunk: int) -> Array:
+    """Flash-style online softmax in pure jnp: lax.scan over KV chunks.
+
+    Peak memory O(B*T*chunk) instead of O(B*T*S) — this is what makes 32k
+    prefill lower/compile within per-device HBM, on any backend.
+    """
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    n_chunks = s // chunk
+    assert s % chunk == 0
+    qg = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, t, kv, group, d)
+    ks = k.reshape(b, n_chunks, chunk, kv, d).astype(jnp.float32)
+    vs = v.reshape(b, n_chunks, chunk, kv, d).astype(jnp.float32)
+    rows = q_offset + jnp.arange(t)[:, None]
+
+    def step(carry, inp):
+        acc, m_run, l_run = carry
+        kc, vc, c_idx = inp
+        logits = jnp.einsum("btkgd,bskd->bkgts", qg, kc)
+        if causal:
+            cols = c_idx * chunk + jnp.arange(chunk)[None, :]
+            logits = jnp.where((cols <= rows)[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = corr * l_run + p.sum(axis=-1)
+        acc = corr[..., None] * acc + jnp.einsum("bkgts,bskd->bkgtd", p, vc)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv, group, t, d), jnp.float32)
+    m0 = jnp.full((b, kv, group, t), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, group, t), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, t, h, d)
+    return out.astype(q.dtype)
+
+
+def attention(p: dict, cfg, x: Array, positions: Array,
+              kv_cache: Optional[tuple] = None, cache_pos=None,
+              causal: bool = True, x_kv: Optional[Array] = None,
+              precomputed_kv: bool = False):
+    """Full attention block.  Returns (out, new_kv_cache).
+
+    kv_cache: (k, v) with shape (B, S_max, KV, D) — decode fills slot
+    ``cache_pos`` and attends to the first cache_pos+T entries.
+    x_kv: source for K/V (cross-attention); defaults to x.
+    precomputed_kv: the cache already holds final K/V (e.g. encoder output
+    projections) — attend to it directly, no projection or cache update.
+    """
+    if precomputed_kv:
+        ck, cv = kv_cache
+        q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        out = _dense_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                               causal=False, q_offset=0)
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+        return y, kv_cache
+
+    src = x if x_kv is None else x_kv
+    q = jnp.einsum("btd,dhk->bthk", x, fsdp_full(cfg, p, "wq").astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", src, fsdp_full(cfg, p, "wk").astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", src, fsdp_full(cfg, p, "wv").astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if x_kv is None:  # RoPE only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kv_positions = positions if kv_cache is None else (
+            cache_pos + jnp.arange(k.shape[1]))
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        k_eff, v_eff = ck, cv
+        q_offset = cache_pos
+        new_cache = (ck, cv)
+    else:
+        k_eff, v_eff = k, v
+        q_offset = 0
+        new_cache = None
+
+    # decode (t == 1): always the dense path — logits are (B, H, 1, S),
+    # tiny, and softmax over a sequence-SHARDED cache lowers to stat
+    # all-reduces; the chunked path's scan would re-gather every chunk of
+    # the sharded seq dim (§Perf iteration 3).
+    if q.shape[1] == 1 and kv_cache is not None:
+        out = _dense_attention(q, k_eff, v_eff, causal, q_offset)
+    elif cfg.attn_impl == "chunked" and k_eff.shape[1] % cfg.attn_chunk == 0:
+        out = _chunked_attention(q, k_eff, v_eff, causal, q_offset,
+                                 cfg.attn_chunk)
+    elif cfg.attn_impl == "pallas" and kv_cache is None and causal:
+        from ..kernels.flash_attention import flash_attention
+        qt = jnp.moveaxis(q, 2, 1)
+        out = flash_attention(qt, jnp.moveaxis(k_eff, 2, 1),
+                              jnp.moveaxis(v_eff, 2, 1),
+                              causal=True, interpret=True)
+        out = jnp.moveaxis(out, 1, 2)
+    else:
+        out = _dense_attention(q, k_eff, v_eff, causal, q_offset)
+
+    y = jnp.einsum("bthk,hkd->btd", out, fsdp_full(cfg, p, "wo").astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated and plain) + MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    p = {"w_up": jax.random.normal(ks[0], (d, f), cfg.pdtype()) * d ** -0.5,
+         "w_down": jax.random.normal(ks[1], (f, d), cfg.pdtype()) * f ** -0.5}
+    if gated:
+        p["w_gate"] = jax.random.normal(ks[2], (d, f), cfg.pdtype()) * d ** -0.5
+    return p
+
+
+def _act(cfg, g: Array) -> Array:
+    if cfg.act == "swiglu":
+        return jax.nn.silu(g)
+    if cfg.act == "geglu":
+        return jax.nn.gelu(g, approximate=True)
+    return jax.nn.gelu(g, approximate=True)
+
+
+def mlp(p: dict, cfg, x: Array) -> Array:
+    up = x @ fsdp_full(cfg, p, "w_up").astype(x.dtype)
+    if "w_gate" in p:
+        up = up * _act(cfg, x @ fsdp_full(cfg, p, "w_gate").astype(x.dtype))
+    else:
+        up = _act(cfg, up)
+    return up @ fsdp_full(cfg, p, "w_down").astype(x.dtype)
+
+
+def init_moe(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.experts_pad
+    gated = cfg.act in ("swiglu", "geglu")
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(ks[1], (e, d, f), cfg.pdtype()) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (e, f, d), cfg.pdtype()) * f ** -0.5,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(ks[3], (e, d, f), cfg.pdtype()) * d ** -0.5
+    return p
+
+
+def moe(p: dict, cfg, x: Array):
+    """Top-k token-choice MoE with capacity-bounded dispatch/combine einsums
+    (Mesh-TF style — TPU-native: dense MXU contractions, no scatter).
+
+    GROUPED dispatch (Switch-style ``group_size``): the dispatch/combine
+    one-hot contractions cost O(T * E * C * d) with C ~ T*k/E — i.e.
+    O(T^2 * k * d), quadratic in per-device tokens.  Splitting tokens into
+    G independent groups with per-group capacity C/G makes it
+    O(T * S * k * d) (S = group size): G-fold cheaper, identical routing
+    semantics up to capacity being enforced per group (exactly what
+    Switch/GLaM do, for the same reason).
+
+    Returns (out, aux_loss).
+    """
+    b, t, d = x.shape
+    mo = cfg.moe
+    e, k = mo.experts_pad, mo.top_k
+    tokens = b * t
+    s = cfg.moe_group_size or tokens
+    s = min(s, tokens)
+    while tokens % s:                        # ragged guard: shrink to divisor
+        s //= 2
+    g = tokens // s
+    cap = max(1, int(mo.capacity_factor * s * k / mo.n_experts))
+
+    xf = x.reshape(g, s, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])        # (G, S, E_pad)
+    if e != mo.n_experts:   # padded experts are never routed to
+        logits = jnp.where(jnp.arange(e) < mo.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)               # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) in its expert's per-group buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)       # (G, S, k, E)
+    flat = onehot.reshape(g, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g, s, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)                 # (G, S, k)
+    keep = (pos < cap)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=jnp.float32)[..., :cap]  # (G, S, k, C)
+    e_oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # (G, S, k, E)
+    disp = jnp.einsum("gske,gskc->gsec", e_oh, pos_oh)     # (G, S, E, C)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", e_oh, pos_oh,
+                      gate_vals * keep.astype(jnp.float32))
+
+    # dispatch contraction in compute dtype: disp is 0/1 so xe is an exact
+    # copy of the (bf16) activations — and the partial-sum all-reduce XLA
+    # inserts when it seq-shards this einsum moves half the bytes vs f32
+    # (§Perf iteration 6)
+    xe = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xf)
+    up = jnp.einsum("gecd,edf->gecf", xe,
+                    fsdp_full(cfg, p, "w_up").astype(x.dtype))
+    if "w_gate" in p:
+        up = up * _act(cfg, jnp.einsum(
+            "gecd,edf->gecf", xe, fsdp_full(cfg, p, "w_gate").astype(x.dtype)))
+    else:
+        up = _act(cfg, up)
+    ye = jnp.einsum("gecf,efd->gecd", up,
+                    fsdp_full(cfg, p, "w_down").astype(x.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye.astype(jnp.float32))
+
+    # load-balancing aux loss (Switch-style), over all tokens
+    density = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32).mean((0, 1))
+    router_prob = probs.mean((0, 1))
+    aux = (density * router_prob).sum() * e
+    return y.reshape(b, t, d).astype(x.dtype), aux

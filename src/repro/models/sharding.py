@@ -1,0 +1,207 @@
+"""Sharding rules: param-pytree -> PartitionSpec-pytree, by leaf name.
+
+Policy (mesh axes: optional 'pod', 'data', 'model'):
+
+* TP ('model'): attention heads (padded to a multiple of the model-axis size
+  by configs), d_ff, expert dim (when divisible), vocab rows, mamba inner dim.
+  A dim is sharded ONLY when divisible by the axis size — otherwise it stays
+  replicated (the config-level head padding makes the important ones divisible).
+* FSDP (cfg.fsdp_params, grok-scale): weight matrices additionally shard their
+  d_model dim over 'data' — XLA all-gathers per layer inside the scan
+  (weights-stationary ZeRO-3).
+* ZeRO-1 (cfg.zero_stage >= 1): optimizer moments additionally shard their
+  largest remaining dim over 'data' (reduce-scatter grads / all-gather params
+  is then XLA's natural lowering of the update).
+* 'pod' is a pure DP axis: params/opt replicated across pods, batch sharded.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape) -> P:
+    """PartitionSpec for one param leaf.  ``path``: dot-joined key path;
+    ``shape`` is the *layer-stacked* shape (leading L dim for scanned leaves).
+    """
+    tp = _axis_size(mesh, "model")
+    name = path.split(".")[-1]
+    stacked = any(s in path for s in ("layers.", "enc_layers.", "dec_layers."))
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    fsdp = "data" if (cfg.fsdp_params and "data" in mesh.axis_names) else None
+
+    def fd(dim):  # fsdp-shard a d_model-sized dim if divisible
+        return fsdp if (fsdp and _div(dim, _axis_size(mesh, "data"))) else None
+
+    if name in ("embed", ):
+        return P("model" if _div(shape[0], tp) else None, fd(shape[1]))
+    if name == "lm_head":
+        return P(fd(shape[0]), "model" if _div(shape[1], tp) else None)
+    if name == "scale":
+        return P(*lead, *(None,) * len(body))
+
+    if name == "wq":
+        return P(*lead, fd(body[0]),
+                 "model" if _div(body[1], tp) else None, None)
+    if name in ("wk", "wv"):
+        return P(*lead, fd(body[0]),
+                 "model" if _div(body[1], tp) else None, None)
+    if name == "wo":
+        return P(*lead, "model" if _div(body[0], tp) else None, None,
+                 fd(body[2]))
+    if name in ("bq", "bk", "bv"):
+        return P(*lead, "model" if _div(body[0], tp) else None, None)
+
+    if name in ("w_up", "w_gate", "w_down") and len(body) == 3:  # MoE (e,d,f)/(e,f,d)
+        if _div(body[0], tp):                      # expert parallelism
+            return P(*lead, "model", fd(body[1]), None)
+        ff_axis = 2 if name != "w_down" else 1     # TP within expert
+        spec = [None, None, None]
+        if _div(body[ff_axis], tp):
+            spec[ff_axis] = "model"
+        d_axis = 1 if name != "w_down" else 2
+        spec[d_axis] = fd(body[d_axis])
+        return P(*lead, *spec)
+    if name == "router":
+        return P(*lead, fd(body[0]), None)
+    if name in ("w_up", "w_gate"):                 # dense MLP (d, f)
+        return P(*lead, fd(body[0]), "model" if _div(body[1], tp) else None)
+    if name == "w_down":                           # dense MLP (f, d)
+        return P(*lead, "model" if _div(body[0], tp) else None, fd(body[1]))
+
+    if name in ("w_x", "w_z"):                     # mamba (d, d_in)
+        h = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+        ok = _div(h, tp)
+        return P(*lead, fd(body[0]), "model" if ok else None)
+    if name == "w_dt":
+        h = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+        return P(*lead, fd(body[0]), "model" if _div(h, tp) else None)
+    if name == "w_bc":
+        return P(*lead, fd(body[0]), None)
+    if name == "conv_w":
+        h = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+        return P(*lead, None, "model" if _div(h, tp) else None)
+    if name in ("a_log", "dt_bias", "d_skip"):
+        h = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+        return P(*lead, "model" if _div(h, tp) else None)
+    if name == "out_proj":                         # (d_in, d)
+        h = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+        return P(*lead, "model" if _div(h, tp) else None, fd(body[1]))
+
+    return P(*lead, *(None,) * len(body))
+
+
+def _path_str(path) -> str:
+    out = []
+    for pp in path:
+        if isinstance(pp, jax.tree_util.DictKey):
+            out.append(str(pp.key))
+        elif isinstance(pp, jax.tree_util.SequenceKey):
+            out.append(str(pp.idx))
+    return ".".join(out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> dict:
+    """Spec pytree for the whole param tree (shapes from jax.eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(cfg, mesh, _path_str(path), leaf.shape),
+        params_shape)
+
+
+def zero_extend(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: shard the largest unsharded dim of an optimizer-moment leaf
+    over 'data' (if divisible).  No-op when 'data' is absent/used already."""
+    if "data" not in mesh.axis_names or "data" in jax.tree.leaves(tuple(spec)):
+        return spec
+    ds = _axis_size(mesh, "data")
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (s, d) in enumerate(zip(entries, shape)):
+        if s is None and d % ds == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best >= 0 and best_dim >= ds:
+        entries[best] = "data"
+    return P(*entries)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> dict:
+    """Specs for one AdamW moment tree (same structure as params)."""
+    base = param_specs(cfg, mesh, params_shape)
+    if cfg.zero_stage < 1:
+        return base
+    return jax.tree.map(
+        lambda spec, leaf: zero_extend(spec, leaf.shape, mesh),
+        base, params_shape)
+
+
+def to_named(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Token batches: batch dim sharded over all DP axes."""
+    return P(dp_axes(mesh))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape,
+                shard_seq: bool = False) -> dict:
+    """Decode-cache specs.  Layout (L, B, S, KV, HD) / mamba (L, B, H, N, P).
+
+    Batch over DP axes; for the KV cache, kv-heads over 'model' when
+    divisible, otherwise the SEQUENCE dim over 'model' (flash-decode style:
+    the q.K^T softmax over a sharded seq axis lowers to tiny max/sum stat
+    all-reduces and the cache never moves — vs GSPMD's fallback of gathering
+    the whole cache per layer; EXPERIMENTS.md §Perf iteration 3).
+    ``shard_seq`` (long-context, batch=1): S over ('data','model') — batch
+    gives no parallelism, the 512k history is split over the whole pod.
+    """
+    tp = _axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name = _path_str(path).split(".")[-1]
+        if name in ("k", "v", "xk", "xv", "attn_k", "attn_v"):
+            kv = leaf.shape[3]
+            seq = leaf.shape[2]
+            kv_ax = "model" if _div(kv, tp) else None
+            if shard_seq:
+                seq_axes = ("data",) if kv_ax else ("data", "model")
+                if _div(seq, _axis_size(mesh, "data") *
+                        (1 if kv_ax else tp)):
+                    return P(None, None, seq_axes, kv_ax, None)
+                return P(None, None, None, kv_ax, None)
+            if kv_ax:
+                return P(None, dp, None, kv_ax, None)
+            if _div(seq, tp):
+                return P(None, dp, "model", None, None)  # seq-parallel cache
+            return P(None, dp, None, None, None)  # e.g. whisper xk: S=1500
+        if name == "ssm":                      # (L, B, H, N, P)
+            h = leaf.shape[2]
+            return P(None, None if shard_seq else dp,
+                     "model" if _div(h, tp) else None, None, None)
+        if name == "conv":                     # (L, B, W, d_in)
+            h = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+            return P(None, None if shard_seq else dp, None,
+                     "model" if _div(h, tp) else None)
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

@@ -1,0 +1,165 @@
+"""Mamba2 block built on the SSD chunked scan.
+
+The chunked-jnp implementation below mirrors the Pallas kernel
+(repro/kernels/ssd_scan) op-for-op but compiles on any backend — it is the
+default for dry-runs and CPU tests; the Pallas kernel is the TPU fast path
+(cfg-switched via ``ssd_impl``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_chunked(x: Array, a: Array, b: Array, c: Array, chunk: int,
+                init_state: Optional[Array] = None):
+    """Chunked SSD scan in pure jnp.  x: (B, H, T, P), a: (B, H, T) log-decay,
+    b/c: (B, H, T, N).  Returns (y, final_state (B, H, N, P))."""
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    xs = x.reshape(bsz, h, nc, chunk, p).astype(jnp.float32)
+    as_ = a.reshape(bsz, h, nc, chunk).astype(jnp.float32)
+    bs = b.reshape(bsz, h, nc, chunk, n).astype(jnp.float32)
+    cs_ = c.reshape(bsz, h, nc, chunk, n).astype(jnp.float32)
+
+    rows = jnp.arange(chunk)[:, None]
+    cols = jnp.arange(chunk)[None, :]
+    l_mask = rows >= cols
+
+    def step(state, inp):
+        xc, ac, bc, cc = inp                       # (B,H,Q,*) per chunk
+        cum = jnp.cumsum(ac, axis=-1)              # (B,H,Q) inclusive
+        li = cum[..., :, None] - cum[..., None, :]
+        l_decay = jnp.where(l_mask, jnp.exp(jnp.where(l_mask, li, 0.0)), 0.0)
+        cb = jnp.einsum("bhqn,bhsn->bhqs", cc, bc)
+        y_intra = jnp.einsum("bhqs,bhsp->bhqp", cb * l_decay, xc)
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bhqn,bhnp->bhqp", cc, state)
+        w = jnp.exp(cum[..., -1:] - cum)[..., None] * bc
+        new_state = (jnp.exp(cum[..., -1])[..., None, None] * state
+                     + jnp.einsum("bhqn,bhqp->bhnp", w, xc))
+        return new_state, y_intra + y_inter
+
+    s0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(xs, 2, 0), jnp.moveaxis(as_, 2, 0),
+         jnp.moveaxis(bs, 2, 0), jnp.moveaxis(cs_, 2, 0)))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, t, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state: Array, x: Array, a: Array, b: Array, c: Array):
+    """One-token recurrence.  state: (B, H, N, P); x: (B, H, P);
+    a: (B, H); b/c: (B, H, N).  Returns (y (B, H, P), new_state)."""
+    state = (jnp.exp(a)[..., None, None] * state.astype(jnp.float32)
+             + jnp.einsum("bhn,bhp->bhnp", b.astype(jnp.float32),
+                          x.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhnp->bhp", c.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg) -> dict:
+    """Separate projection matrices (w_x / w_z / w_bc / w_dt) rather than one
+    fused in_proj: each output axis is then individually TP-shardable without
+    the shard boundary cutting across segment boundaries of a concat axis."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expansion * d
+    h = s.n_heads(d)
+    n = s.state_dim
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d, d_in), cfg.pdtype()) * std,
+        "w_z": jax.random.normal(ks[1], (d, d_in), cfg.pdtype()) * std,
+        "w_bc": jax.random.normal(ks[2], (d, 2 * n), cfg.pdtype()) * std,
+        "w_dt": jax.random.normal(ks[3], (d, h), cfg.pdtype()) * std,
+        "conv_w": jax.random.normal(ks[4], (s.conv_width, d_in), cfg.pdtype()) * 0.1,
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": jax.random.normal(ks[0], (d_in, d), cfg.pdtype()) * d_in ** -0.5,
+    }
+
+
+def mamba_block(p: dict, cfg, x: Array, ssm_state=None, conv_state=None,
+                decode: bool = False):
+    """x: (B, T, D).  Train/prefill when decode=False (T arbitrary);
+    one-token step when decode=True (T == 1, states required).
+
+    Returns (y, (ssm_state, conv_state))."""
+    s = cfg.ssm
+    b_, t, d = x.shape
+    d_in = s.expansion * d
+    h = s.n_heads(d)
+    n = s.state_dim
+    x_in = x @ p["w_x"].astype(x.dtype)
+    z = x @ p["w_z"].astype(x.dtype)
+    bc = x @ p["w_bc"].astype(x.dtype)
+    b_in, c_in = bc[..., :n], bc[..., n:]
+    dt = x @ p["w_dt"].astype(x.dtype)
+
+    # causal depthwise conv over time (width W)
+    w = p["conv_w"].astype(x.dtype)                    # (W, d_in)
+    if decode:
+        conv_state = jnp.concatenate([conv_state[:, 1:], x_in], axis=1)
+        x_conv = jnp.einsum("bwc,wc->bc", conv_state.astype(x.dtype), w)[:, None]
+        new_conv_state = conv_state
+    else:
+        # causal depthwise conv as W shifted adds (no (B,T,W,C) blow-up)
+        pad = jnp.zeros((b_, s.conv_width - 1, d_in), x.dtype)
+        xp = jnp.concatenate([pad, x_in], axis=1)      # (B, T+W-1, d_in)
+        x_conv = jnp.zeros((b_, t, d_in), x.dtype)
+        for wi in range(s.conv_width):
+            x_conv = x_conv + w[wi] * jax.lax.dynamic_slice_in_dim(
+                xp, wi, t, axis=1)
+        new_conv_state = xp[:, -s.conv_width:]         # last W entries
+    x_conv = jax.nn.silu(x_conv)
+
+    # heads
+    xh = x_conv.reshape(b_, t, h, s.head_dim)
+    dt_soft = jax.nn.softplus(dt.astype(jnp.float32)
+                              + p["dt_bias"])          # (B, T, H)
+    a = -jnp.exp(p["a_log"]) * dt_soft                 # log-decay (B, T, H)
+    bmat = (b_in.astype(jnp.float32)[:, :, None, :]
+            * dt_soft[..., None])                      # (B, T, H, N) dt-scaled
+    cmat = jnp.broadcast_to(c_in.astype(jnp.float32)[:, :, None, :],
+                            (b_, t, h, n))
+
+    if decode:
+        y, new_ssm = ssd_decode_step(
+            ssm_state, xh[:, 0], a[:, 0], bmat[:, 0], cmat[:, 0])
+        y = y[:, None]                                 # (B, 1, H, P)
+    else:
+        xt = jnp.moveaxis(xh, 1, 2)                    # (B, H, T, P)
+        at = jnp.moveaxis(a, 1, 2)                     # (B, H, T)
+        bt = jnp.moveaxis(bmat, 1, 2)
+        ct = jnp.moveaxis(cmat, 1, 2)
+        if getattr(cfg, "ssd_impl", "chunked") == "pallas":
+            from ..kernels.ssd_scan import ssd_scan
+            yt = ssd_scan(xt, at, bt, ct, chunk=cfg.ssd_chunk)
+            new_ssm = None
+        else:
+            chunk = min(cfg.ssd_chunk, t) if t % min(cfg.ssd_chunk, t) == 0 \
+                else t
+            yt, new_ssm = ssd_chunked(xt, at, bt, ct, chunk)
+        y = jnp.moveaxis(yt, 1, 2)                     # (B, T, H, P)
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b_, t, d_in)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, (new_ssm, new_conv_state)

@@ -1,0 +1,427 @@
+"""Full-model assembly for every assigned architecture family.
+
+One functional model with four entry points:
+
+* ``init_params(key, cfg)``            -> param pytree (layers stacked on L for scan)
+* ``forward(cfg, params, tokens, ...)`` -> logits           (train / prefill)
+* ``init_cache(cfg, batch, seq)``      -> decode cache pytree
+* ``decode_step(cfg, params, cache, tokens, pos)`` -> (logits, cache)
+
+Families are selected by ``cfg.block_pattern`` / ``cfg.enc_dec`` / ``cfg.frontend``:
+
+  attn          dense + MoE decoder-only (gemma/qwen2/starcoder2/glm4/granite/grok)
+  mamba         pure SSM (mamba2-130m)
+  zamba_hybrid  Mamba2 backbone + one *shared* attention block applied every
+                ``hybrid_attn_every`` layers (Zamba2)
+  enc_dec       Whisper: bidirectional encoder over stubbed frame embeddings,
+                causal decoder with cross-attention
+  vlm           LLaVA: decoder-only backbone; stubbed patch embeddings are
+                spliced over the first image-token positions
+
+Distribution notes: every layer is scanned (params stacked on a leading L
+axis) so HLO size is depth-independent; ``cfg.remat`` wraps each layer in
+``jax.checkpoint``.  TP head-padding (``n_heads_pad`` etc.) is decided in
+``repro.configs`` — padded Q/O rows are zero so outputs are exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (attention, init_attention, init_mlp, init_moe,
+                     init_rmsnorm, mlp, moe, rmsnorm)
+from .ssd import init_mamba, mamba_block
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype()),
+         "attn": init_attention(k1, cfg),
+         "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype())}
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def _init_mamba_layer(key, cfg) -> dict:
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype()),
+            "mamba": init_mamba(key, cfg)}
+
+
+def _init_cross_layer(key, cfg) -> dict:
+    """Decoder layer with self-attn + cross-attn + mlp (Whisper decoder)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype()),
+            "attn": init_attention(k1, cfg),
+            "ln_x": init_rmsnorm(cfg.d_model, cfg.pdtype()),
+            "xattn": init_attention(k2, cfg),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype()),
+            "mlp": init_mlp(k3, cfg)}
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n keys -> leaves with leading (n, ...) axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg) -> dict:
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    emb_std = cfg.d_model ** -0.5
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab_pad, cfg.d_model),
+                                   cfg.pdtype()) * emb_std,
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.pdtype()),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_pad), cfg.pdtype()) * emb_std
+
+    if cfg.enc_dec:
+        params["enc_layers"] = _stack_init(
+            lambda k: _init_attn_layer(k, cfg), kl, cfg.n_encoder_layers)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, cfg.pdtype())
+        params["dec_layers"] = _stack_init(
+            lambda k: _init_cross_layer(k, cfg), ks, cfg.n_layers)
+    elif cfg.block_pattern == "attn":
+        params["layers"] = _stack_init(
+            lambda k: _init_attn_layer(k, cfg), kl, cfg.n_layers)
+    elif cfg.block_pattern == "mamba":
+        params["layers"] = _stack_init(
+            lambda k: _init_mamba_layer(k, cfg), kl, cfg.n_layers)
+    elif cfg.block_pattern == "zamba_hybrid":
+        params["layers"] = _stack_init(
+            lambda k: _init_mamba_layer(k, cfg), kl, cfg.n_layers)
+        params["shared_attn"] = _init_attn_layer(ks, cfg)
+    else:
+        raise ValueError(cfg.block_pattern)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan_layers(cfg, body, carry, xs, length: int):
+    """lax.scan when cfg.scan_layers (HLO size O(1) in depth) else an
+    unrolled Python loop (exact per-layer cost accounting for the dry-run's
+    roofline extrapolation — XLA cost analysis counts loop bodies once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a, axis=0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _attn_layer_fwd(cfg, lp, h, positions, causal=True):
+    a, _ = attention(lp["attn"], cfg, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                     positions, causal=causal)
+    h = h + a
+    hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = moe(lp["moe"], cfg, hn)
+    else:
+        m, aux = mlp(lp["mlp"], cfg, hn), jnp.float32(0.0)
+    return h + m, aux
+
+
+def _mamba_layer_fwd(cfg, lp, h):
+    y, _ = mamba_block(lp["mamba"], cfg,
+                       rmsnorm(lp["ln1"], h, cfg.norm_eps))
+    return h + y
+
+
+def _logits(cfg, params, h) -> Array:
+    from .layers import fsdp_full
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w = (fsdp_full(cfg, params, "embed").T if cfg.tie_embeddings
+         else fsdp_full(cfg, params, "lm_head"))
+    logits = h @ w.astype(h.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    # mask vocab padding so softmax normalization is exact
+    if cfg.vocab_pad != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_pad) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _decoder_stack(cfg, params, h, positions):
+    """Scan the decoder-only stack; returns (h, moe_aux_sum)."""
+    if cfg.block_pattern == "attn":
+        def body(carry, lp):
+            h = carry
+            h, aux = _maybe_remat(
+                lambda hh: _attn_layer_fwd(cfg, lp, hh, positions), cfg)(h)
+            return h, aux
+        h, auxs = _scan_layers(cfg, body, h, params["layers"], cfg.n_layers)
+        return h, auxs.sum()
+
+    if cfg.block_pattern == "mamba":
+        def body(carry, lp):
+            h = carry
+            h = _maybe_remat(lambda hh: _mamba_layer_fwd(cfg, lp, hh), cfg)(h)
+            return h, jnp.float32(0.0)
+        h, _ = _scan_layers(cfg, body, h, params["layers"], cfg.n_layers)
+        return h, jnp.float32(0.0)
+
+    if cfg.block_pattern == "zamba_hybrid":
+        shared = params["shared_attn"]
+        every = cfg.hybrid_attn_every
+
+        def body(carry, xs):
+            h = carry
+            li, lp = xs
+
+            def full(hh):
+                hh = _mamba_layer_fwd(cfg, lp, hh)
+                use_attn = (li % every) == (every - 1)
+
+                def with_attn(hx):
+                    hx2, _ = _attn_layer_fwd(cfg, shared, hx, positions)
+                    return hx2
+                return jax.lax.cond(use_attn, with_attn, lambda hx: hx, hh)
+
+            h = _maybe_remat(full, cfg)(h)
+            return h, jnp.float32(0.0)
+
+        idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        h, _ = _scan_layers(cfg, body, h, (idx, params["layers"]), cfg.n_layers)
+        return h, jnp.float32(0.0)
+
+    raise ValueError(cfg.block_pattern)
+
+
+def encode(cfg, params, frames: Array) -> Array:
+    """Whisper encoder: bidirectional attention over stubbed frame embeddings."""
+    h = frames.astype(cfg.dtype())
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(carry, lp):
+        h = carry
+        h, _ = _maybe_remat(
+            lambda hh: _attn_layer_fwd(cfg, lp, hh, positions, causal=False),
+            cfg)(h)
+        return h, None
+    h, _ = _scan_layers(cfg, body, h, params["enc_layers"], cfg.n_encoder_layers)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _cross_decoder_stack(cfg, params, h, positions, enc_out):
+    def body(carry, lp):
+        h = carry
+
+        def full(hh):
+            a, _ = attention(lp["attn"], cfg,
+                             rmsnorm(lp["ln1"], hh, cfg.norm_eps),
+                             positions, causal=True)
+            hh = hh + a
+            x, _ = attention(lp["xattn"], cfg,
+                             rmsnorm(lp["ln_x"], hh, cfg.norm_eps),
+                             positions, causal=False, x_kv=enc_out)
+            hh = hh + x
+            return hh + mlp(lp["mlp"], cfg,
+                            rmsnorm(lp["ln2"], hh, cfg.norm_eps))
+        h = _maybe_remat(full, cfg)(h)
+        return h, None
+    h, _ = _scan_layers(cfg, body, h, params["dec_layers"], cfg.n_layers)
+    return h
+
+
+def forward(cfg, params, tokens: Array,
+            frames: Optional[Array] = None,
+            patch_embeds: Optional[Array] = None):
+    """Causal LM forward.  Returns (logits (B, T, vocab_pad), moe_aux)."""
+    from .layers import fsdp_full
+    h = jnp.take(fsdp_full(cfg, params, "embed"), tokens,
+                 axis=0).astype(cfg.dtype())
+    if cfg.frontend == "vision_stub" and patch_embeds is not None:
+        # splice precomputed patch embeddings over the image-token prefix
+        p = patch_embeds.astype(h.dtype)
+        h = jnp.concatenate([p, h[:, p.shape[1]:]], axis=1)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, frames)
+        h = _cross_decoder_stack(cfg, params, h, positions, enc_out)
+        return _logits(cfg, params, h), jnp.float32(0.0)
+
+    h, aux = _decoder_stack(cfg, params, h, positions)
+    return _logits(cfg, params, h), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step with caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq: int) -> dict:
+    """Abstract-friendly cache pytree (all-zeros; dry-run uses eval_shape)."""
+    kv, hd = cfg.kv_pad, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cache = {}
+    if cfg.enc_dec:
+        f = cfg.frontend_tokens
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq, kv, hd), cdt)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq, kv, hd), cdt)
+        cache["xk"] = jnp.zeros((cfg.n_layers, batch, f, kv, hd), cdt)
+        cache["xv"] = jnp.zeros((cfg.n_layers, batch, f, kv, hd), cdt)
+        return cache
+    if cfg.block_pattern == "attn":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq, kv, hd), cdt)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq, kv, hd), cdt)
+        return cache
+    s = cfg.ssm
+    d_in = s.expansion * cfg.d_model
+    h = s.n_heads(cfg.d_model)
+    cache["ssm"] = jnp.zeros((cfg.n_layers, batch, h, s.state_dim,
+                              s.head_dim), jnp.float32)
+    cache["conv"] = jnp.zeros((cfg.n_layers, batch, s.conv_width, d_in), cdt)
+    if cfg.block_pattern == "zamba_hybrid":
+        n_attn = cfg.n_layers // cfg.hybrid_attn_every
+        cache["attn_k"] = jnp.zeros((n_attn, batch, seq, kv, hd), cdt)
+        cache["attn_v"] = jnp.zeros((n_attn, batch, seq, kv, hd), cdt)
+    return cache
+
+
+def decode_step(cfg, params, cache: dict, tokens: Array, pos: Array):
+    """One-token decode.  tokens: (B, 1) int32; pos: scalar int32 (cache fill).
+
+    Returns (logits (B, 1, vocab_pad), new_cache)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype())
+    positions = pos + jnp.zeros(tokens.shape, jnp.int32)
+
+    if cfg.enc_dec:
+        def body(carry, xs):
+            h = carry
+            lp, ck, cv, cxk, cxv = xs
+            a, (nk, nv) = attention(lp["attn"], cfg,
+                                    rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                    positions, kv_cache=(ck, cv),
+                                    cache_pos=pos, causal=True)
+            h = h + a
+            x, _ = attention(lp["xattn"], cfg,
+                             rmsnorm(lp["ln_x"], h, cfg.norm_eps),
+                             positions, kv_cache=(cxk, cxv), cache_pos=None,
+                             causal=False, x_kv=None, precomputed_kv=True)
+            h = h + x
+            h = h + mlp(lp["mlp"], cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
+            return h, (nk, nv)
+        h, (nks, nvs) = _scan_layers(
+            cfg, body, h, (params["dec_layers"], cache["k"], cache["v"],
+                           cache["xk"], cache["xv"]), cfg.n_layers)
+        new_cache = dict(cache, k=nks, v=nvs)
+        return _logits(cfg, params, h), new_cache
+
+    if cfg.block_pattern == "attn":
+        def body(carry, xs):
+            h = carry
+            lp, ck, cv = xs
+            h, aux = _attn_decode_layer(cfg, lp, h, positions, ck, cv, pos)
+            return h, aux
+        h, (nks, nvs) = _scan_layers(
+            cfg, body, h, (params["layers"], cache["k"], cache["v"]),
+            cfg.n_layers)
+        return _logits(cfg, params, h), dict(cache, k=nks, v=nvs)
+
+    if cfg.block_pattern == "mamba":
+        def body(carry, xs):
+            h = carry
+            lp, s_ssm, s_conv = xs
+            y, (ns, nc) = mamba_block(lp["mamba"], cfg,
+                                      rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                      ssm_state=s_ssm, conv_state=s_conv,
+                                      decode=True)
+            return h + y, (ns, nc)
+        h, (nss, ncs) = _scan_layers(
+            cfg, body, h, (params["layers"], cache["ssm"], cache["conv"]),
+            cfg.n_layers)
+        return _logits(cfg, params, h), dict(cache, ssm=nss, conv=ncs)
+
+    # zamba_hybrid: mamba scan + shared attention every `every` layers.
+    every = cfg.hybrid_attn_every
+    n_attn = cfg.n_layers // every
+    shared = params["shared_attn"]
+
+    def body(carry, xs):
+        h = carry
+        li, lp, s_ssm, s_conv = xs
+        y, (ns, nc) = mamba_block(lp["mamba"], cfg,
+                                  rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                  ssm_state=s_ssm, conv_state=s_conv,
+                                  decode=True)
+        h = h + y
+        return h, (ns, nc)
+
+    idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    # Mamba layers scanned in groups of `every` (shared attention applied
+    # after each full group, mirroring forward's (li % every == every-1)
+    # cadence); trailing remainder layers run after the last attention.
+    # Groups are a Python loop over n_attn (~13) of scans — HLO stays small.
+    new_ssm, new_conv = [], []
+    new_ak, new_av = [], []
+    bounds = [(g * every, (g + 1) * every) for g in range(n_attn)]
+    if n_attn * every < cfg.n_layers:                 # remainder, no attn
+        bounds.append((n_attn * every, cfg.n_layers))
+    if not bounds:                                    # n_layers < every
+        bounds = [(0, cfg.n_layers)]
+    for g, (lo, hi) in enumerate(bounds):
+        sl = slice(lo, hi)
+        seg = jax.tree.map(lambda a: a[sl], params["layers"])
+        h, (ns, nc) = _scan_layers(
+            cfg, body, h, (idx[sl], seg, cache["ssm"][sl], cache["conv"][sl]),
+            hi - lo)
+        new_ssm.append(ns)
+        new_conv.append(nc)
+        if g < n_attn:
+            a, (nk, nv) = attention(
+                shared["attn"], cfg, rmsnorm(shared["ln1"], h, cfg.norm_eps),
+                positions, kv_cache=(cache["attn_k"][g], cache["attn_v"][g]),
+                cache_pos=pos, causal=True)
+            h = h + a
+            hn = rmsnorm(shared["ln2"], h, cfg.norm_eps)
+            h = h + mlp(shared["mlp"], cfg, hn)
+            new_ak.append(nk)
+            new_av.append(nv)
+    new_cache = dict(cache,
+                     ssm=jnp.concatenate(new_ssm, axis=0),
+                     conv=jnp.concatenate(new_conv, axis=0))
+    if n_attn:
+        new_cache["attn_k"] = jnp.stack(new_ak, axis=0)
+        new_cache["attn_v"] = jnp.stack(new_av, axis=0)
+    return _logits(cfg, params, h), new_cache
+
+
+def _attn_decode_layer(cfg, lp, h, positions, ck, cv, pos):
+    a, (nk, nv) = attention(lp["attn"], cfg,
+                            rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                            positions, kv_cache=(ck, cv), cache_pos=pos,
+                            causal=True)
+    h = h + a
+    hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    if cfg.moe is not None:
+        m, _ = moe(lp["moe"], cfg, hn)
+    else:
+        m = mlp(lp["mlp"], cfg, hn)
+    return h + m, (nk, nv)

@@ -1,0 +1,1 @@
+from .step import build_prefill_step, build_serve_step, greedy_decode

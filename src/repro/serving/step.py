@@ -1,0 +1,44 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``decode_32k`` / ``long_500k`` dry-run cells lower ``serve_step`` — ONE new
+token against a KV/SSM cache of ``seq_len`` — per the brief.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+
+
+def build_prefill_step(cfg):
+    def prefill(params, batch):
+        logits, _ = transformer.forward(
+            cfg, params, batch["tokens"],
+            frames=batch.get("frames"),
+            patch_embeds=batch.get("patch_embeds"))
+        return logits[:, -1, :]
+    return prefill
+
+
+def build_serve_step(cfg):
+    def serve_step(params, cache, tokens, pos):
+        """tokens: (B, 1); pos: () int32 — returns (next_logits, new_cache)."""
+        logits, new_cache = transformer.decode_step(cfg, params, cache,
+                                                    tokens, pos)
+        return logits[:, -1, :], new_cache
+    return serve_step
+
+
+def greedy_decode(cfg, params, cache, prompt_last_token, start_pos, n_steps):
+    """Simple greedy loop used by examples/tests (host loop, jit step)."""
+    step = jax.jit(build_serve_step(cfg))
+    tok = prompt_last_token
+    out = []
+    pos = start_pos
+    for _ in range(n_steps):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1), cache

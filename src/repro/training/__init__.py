@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from .step import build_eval_step, build_train_step, lm_loss

@@ -1,0 +1,47 @@
+"""Loss + train_step builders (arch-generic; shardings applied by caller)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from .optimizer import AdamWConfig, adamw_update
+
+MOE_AUX_COEF = 0.01
+
+
+def lm_loss(cfg, params, batch) -> jax.Array:
+    """Mean next-token cross-entropy.  batch: dict with ``tokens`` (B, T)
+    [+ ``labels``; + ``frames``/``patch_embeds`` for enc-dec / VLM stubs]."""
+    logits, aux = transformer.forward(
+        cfg, params, batch["tokens"],
+        frames=batch.get("frames"), patch_embeds=batch.get("patch_embeds"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + MOE_AUX_COEF * aux
+
+
+def build_train_step(cfg, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch))(params)
+        new_params, new_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg):
+    def eval_step(params, batch):
+        return lm_loss(cfg, params, batch)
+    return eval_step

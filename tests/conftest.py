@@ -1,0 +1,27 @@
+import os
+import sys
+
+# Tests must see 1 CPU device (the dry-run alone forces 512 — never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_bn():
+    from repro.data.bn import random_bn
+    return random_bn(np.random.default_rng(7), n=10, n_edges=12, max_parents=3)
+
+
+@pytest.fixture(scope="session")
+def small_data(small_bn):
+    from repro.data.bn import forward_sample
+    return forward_sample(small_bn, 1200, np.random.default_rng(3))

@@ -1,0 +1,115 @@
+"""DAG utilities: closure, orders, moral graph, CPDAG."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dag
+
+
+def _random_adj(seed, n=8, p=0.25):
+    rng = np.random.default_rng(seed)
+    return dag.random_dag_np(rng, n, int(p * n * (n - 1) / 2), max_parents=4)
+
+
+def _closure_dfs(adj):
+    n = adj.shape[0]
+    reach = np.zeros_like(adj, dtype=bool)
+    for s in range(n):
+        stack = list(np.flatnonzero(adj[s]))
+        seen = set()
+        while stack:
+            v = stack.pop()
+            if v in seen:
+                continue
+            seen.add(v)
+            reach[s, v] = True
+            stack.extend(np.flatnonzero(adj[v]))
+    return reach
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_transitive_closure_matches_dfs(seed):
+    adj = _random_adj(seed)
+    want = _closure_dfs(adj)
+    assert np.array_equal(dag.transitive_closure_np(adj), want)
+    assert np.array_equal(
+        np.asarray(dag.transitive_closure(jnp.asarray(adj))), want)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_incremental_closure(seed):
+    adj = _random_adj(seed)
+    reach = dag.transitive_closure_np(adj)
+    rng = np.random.default_rng(seed + 5)
+    # pick a non-edge that keeps the graph acyclic
+    n = adj.shape[0]
+    for _ in range(20):
+        x, y = rng.integers(0, n, size=2)
+        if x != y and not adj[x, y] and not reach[y, x]:
+            break
+    else:
+        return
+    adj2 = adj.copy()
+    adj2[x, y] = True
+    want = dag.transitive_closure_np(adj2)
+    got = dag.closure_after_edge(reach, int(x), int(y))
+    assert np.array_equal(got, want)
+
+
+def test_is_dag():
+    adj = np.zeros((3, 3), dtype=bool)
+    adj[0, 1] = adj[1, 2] = True
+    assert dag.is_dag_np(adj)
+    adj[2, 0] = True
+    assert not dag.is_dag_np(adj)
+    assert not bool(dag.is_dag(jnp.asarray(adj)))
+
+
+def test_topological_order():
+    adj = np.zeros((4, 4), dtype=bool)
+    adj[2, 0] = adj[0, 1] = adj[1, 3] = True
+    order = dag.topological_order_np(adj)
+    pos = {v: i for i, v in enumerate(order)}
+    assert pos[2] < pos[0] < pos[1] < pos[3]
+
+
+def test_moral_graph_marries_parents():
+    # collider 0 -> 2 <- 1: moral graph must contain 0-1
+    adj = np.zeros((3, 3), dtype=bool)
+    adj[0, 2] = adj[1, 2] = True
+    m = dag.moral_graph_np(adj)
+    assert m[0, 1] and m[1, 0] and m[0, 2] and m[1, 2]
+
+
+def test_smhd_zero_iff_same_moral():
+    adj = np.zeros((3, 3), dtype=bool)
+    adj[0, 1] = adj[1, 2] = True
+    rev = adj.T.copy()          # chain reversed: same skeleton, no collider
+    assert dag.smhd_np(adj, adj) == 0
+    assert dag.smhd_np(adj, rev) == 0     # Markov equivalent chains
+    collider = np.zeros((3, 3), dtype=bool)
+    collider[0, 1] = collider[2, 1] = True
+    assert dag.smhd_np(adj, collider) > 0
+
+
+def test_cpdag_chain_vs_collider():
+    # chain 0->1->2 is fully reversible; collider 0->1<-2 fully compelled
+    chain = np.zeros((3, 3), dtype=bool)
+    chain[0, 1] = chain[1, 2] = True
+    c = dag.dag_to_cpdag_np(chain)
+    assert c[0, 1] and c[1, 0] and c[1, 2] and c[2, 1]
+    coll = np.zeros((3, 3), dtype=bool)
+    coll[0, 1] = coll[2, 1] = True
+    c = dag.dag_to_cpdag_np(coll)
+    assert c[0, 1] and not c[1, 0] and c[2, 1] and not c[1, 2]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_random_dag_is_dag(seed):
+    adj = _random_adj(seed, n=12)
+    assert dag.is_dag_np(adj)
+    order = dag.topological_order_np(adj)
+    assert len(order) == 12

@@ -1,0 +1,49 @@
+"""Integration: the multi-pod dry-run machinery end-to-end (subprocess —
+the 512 forced host devices must never leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, mesh, tmp_path, extra=()):
+    out = os.path.join(str(tmp_path), "cell.jsonl")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh,
+           "--skip-extrap", "--out", out, *extra]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=ROOT,
+                       env=env, timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return json.loads(open(out).readlines()[-1])
+
+
+@pytest.mark.slow
+def test_dryrun_smallest_arch_single_pod(tmp_path):
+    rec = _run_cell("whisper_base", "decode_32k", "pod1", tmp_path)
+    assert rec["ok"] and rec["chips"] == 256
+    assert rec["memory"]["argument_bytes"] > 0
+    assert rec["seconds_compile"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_mesh(tmp_path):
+    rec = _run_cell("mamba2_130m", "decode_32k", "pod2", tmp_path)
+    assert rec["ok"] and rec["chips"] == 512
+
+
+@pytest.mark.slow
+def test_dryrun_records_skips(tmp_path):
+    rec = _run_cell("gemma_7b", "long_500k", "pod1", tmp_path)
+    assert rec["ok"] and rec.get("skipped")
+    assert "full attention" in rec["reason"]
+
+
+def test_device_count_not_leaked():
+    """THIS process must see 1 CPU device (dry-run flags are subprocess-only)."""
+    import jax
+    assert len(jax.devices()) == 1

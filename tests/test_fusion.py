@@ -1,0 +1,90 @@
+"""BN fusion (sigma-consistent edge union) invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dag, fusion
+from repro.core.ring import fuse_jit, gho_order_jit, sigma_consistent_jit
+
+
+def _rand(seed, n=7):
+    rng = np.random.default_rng(seed)
+    return dag.random_dag_np(rng, n, rng.integers(3, 2 * n), max_parents=3)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_sigma_consistent_is_sigma_dag(seed):
+    adj = _rand(seed)
+    n = adj.shape[0]
+    rng = np.random.default_rng(seed + 1)
+    sigma = rng.permutation(n)
+    out = fusion.sigma_consistent(adj, sigma)
+    rank = np.empty(n, dtype=int)
+    rank[sigma] = np.arange(n)
+    xs, ys = np.nonzero(out)
+    assert np.all(rank[xs] < rank[ys])          # respects sigma => DAG
+    assert dag.is_dag_np(out)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_sigma_consistent_preserves_skeleton(seed):
+    """Transform only adds edges / reverses: original skeleton survives."""
+    adj = _rand(seed)
+    n = adj.shape[0]
+    sigma = np.random.default_rng(seed + 1).permutation(n)
+    out = fusion.sigma_consistent(adj, sigma)
+    sk_in = adj | adj.T
+    sk_out = out | out.T
+    assert np.all(sk_out[sk_in])                # superset of skeleton
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_fuse_is_dag_and_contains_skeletons(seed):
+    a, b = _rand(seed), _rand(seed + 13)
+    f = fusion.fuse([a, b])
+    assert dag.is_dag_np(f)
+    sk = (a | a.T) | (b | b.T)
+    assert np.all((f | f.T)[sk])
+
+
+def test_fusion_edge_union_empty_cases():
+    a = _rand(5)
+    zeros = np.zeros_like(a)
+    assert np.array_equal(fusion.fusion_edge_union(zeros, a), a.astype(bool))
+    assert np.array_equal(fusion.fusion_edge_union(a, zeros), a.astype(bool))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_fuse_jit_matches_invariants(seed):
+    """Device-side fusion: result must be a DAG containing both skeletons."""
+    a, b = _rand(seed), _rand(seed + 29)
+    f = np.asarray(fuse_jit(jnp.asarray(a.astype(np.int8)),
+                            jnp.asarray(b.astype(np.int8))))
+    assert dag.is_dag_np(f.astype(bool))
+    sk = (a | a.T) | (b | b.T)
+    assert np.all((f.astype(bool) | f.astype(bool).T)[sk])
+
+
+def test_gho_order_jit_is_permutation():
+    a, b = _rand(3), _rand(4)
+    rank = np.asarray(gho_order_jit(jnp.asarray(a.astype(np.int8)),
+                                    jnp.asarray(b.astype(np.int8))))
+    assert sorted(rank.tolist()) == list(range(a.shape[0]))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_sigma_consistent_jit_matches_host(seed):
+    adj = _rand(seed)
+    n = adj.shape[0]
+    sigma = np.random.default_rng(seed + 1).permutation(n)
+    rank = np.empty(n, dtype=np.int32)
+    rank[sigma] = np.arange(n)
+    host = fusion.sigma_consistent(adj, sigma)
+    dev = np.asarray(sigma_consistent_jit(
+        jnp.asarray(adj.astype(np.int8)), jnp.asarray(rank)))
+    assert np.array_equal(host, dev.astype(bool))

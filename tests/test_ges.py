@@ -1,0 +1,117 @@
+"""GES / fGES / cGES behaviour."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GESConfig, bdeu, cges, fges_host, ges_host, ges_jit
+from repro.core.cges import edge_add_limit
+from repro.core.dag import is_dag_np, smhd_np
+from repro.data.bn import forward_sample, random_bn
+
+CFG = GESConfig(max_q=256)
+
+
+@pytest.fixture(scope="module")
+def case():
+    rng = np.random.default_rng(11)
+    bn = random_bn(rng, n=12, n_edges=14, max_parents=3)
+    data = forward_sample(bn, 1500, rng)
+    return bn, data
+
+
+def test_ges_monotone_and_dag(case):
+    bn, data = case
+    res = ges_host(data, bn.arities, config=CFG)
+    assert is_dag_np(res.adj)
+    empty = bdeu.graph_score_np(data, bn.arities,
+                                np.zeros_like(res.adj))
+    assert res.score > empty
+
+
+def test_ges_respects_allowed_mask(case):
+    bn, data = case
+    n = bn.n
+    allowed = np.zeros((n, n), dtype=bool)
+    allowed[0, 1] = allowed[1, 2] = allowed[3, 4] = True
+    res = ges_host(data, bn.arities, allowed=allowed, config=CFG)
+    assert np.all(allowed | ~res.adj.astype(bool))  # adj subset of allowed
+
+
+def test_ges_add_limit(case):
+    bn, data = case
+    res = ges_host(data, bn.arities, add_limit=3, config=CFG)
+    assert res.n_inserts <= 3
+
+
+def test_ges_jit_matches_host(case):
+    bn, data = case
+    n = bn.n
+    res_h = ges_host(data, bn.arities, config=CFG)
+    adj_j, score_j, n_ins, n_del = ges_jit(
+        jnp.asarray(data.astype(np.int32)),
+        jnp.asarray(bn.arities.astype(np.int32)),
+        jnp.zeros((n, n), jnp.int8), jnp.ones((n, n), jnp.int8),
+        config=CFG)
+    # identical greedy trajectory -> identical graph
+    assert np.array_equal(np.asarray(adj_j), res_h.adj)
+    assert np.isclose(float(score_j), res_h.score, rtol=1e-5, atol=0.5)
+
+
+def test_ges_recovers_chain():
+    """0->1->2 with strong CPTs: GES must recover the Markov equivalence class."""
+    rng = np.random.default_rng(0)
+    m = 4000
+    x0 = rng.integers(0, 2, m)
+    x1 = (x0 ^ (rng.random(m) < 0.05)).astype(int)
+    x2 = (x1 ^ (rng.random(m) < 0.05)).astype(int)
+    data = np.stack([x0, x1, x2], 1).astype(np.int32)
+    ar = np.array([2, 2, 2])
+    res = ges_host(data, ar, config=CFG)
+    truth = np.zeros((3, 3), dtype=np.int8)
+    truth[0, 1] = truth[1, 2] = 1
+    assert smhd_np(res.adj, truth) == 0
+
+
+def test_fges_runs_and_scores(case):
+    bn, data = case
+    res = fges_host(data, bn.arities, config=CFG)
+    assert is_dag_np(res.adj)
+    assert np.isfinite(res.score)
+
+
+def test_edge_add_limit_formula():
+    # (10 / k) * sqrt(n), paper section 3
+    assert edge_add_limit(100, 2) == 50
+    assert edge_add_limit(100, 8) == round(10 / 8 * 10)
+
+
+@pytest.mark.parametrize("limit", [True, False])
+def test_cges_end_to_end(case, limit):
+    bn, data = case
+    res = cges(data, bn.arities, k=2, limit=limit, config=CFG)
+    assert is_dag_np(res.adj)
+    # paper claim: cGES final quality comparable to GES (fine-tune pass
+    # guarantees >= its ring input; compare against GES within tolerance)
+    ref = ges_host(data, bn.arities, config=CFG)
+    assert res.score >= ref.score - abs(ref.score) * 0.02
+    assert res.rounds >= 1
+    assert res.edge_masks.shape[0] == 2
+
+
+def test_cges_engine_jax_close_to_host(case):
+    bn, data = case
+    res_j = cges(data, bn.arities, k=2, limit=True, config=CFG, engine="jax")
+    res_h = cges(data, bn.arities, k=2, limit=True, config=CFG, engine="host")
+    assert is_dag_np(res_j.adj)
+    assert np.isclose(res_j.score, res_h.score,
+                      rtol=5e-3, atol=abs(res_h.score) * 5e-3)
+
+
+def test_score_cache_hits(case):
+    from repro.core import ScoreCache
+    bn, data = case
+    cache = ScoreCache()
+    ges_host(data, bn.arities, config=CFG, cache=cache)
+    before = cache.misses
+    ges_host(data, bn.arities, config=CFG, cache=cache)  # identical run
+    assert cache.hits >= before  # second run served from cache

@@ -1,0 +1,65 @@
+"""Edge partitioning: disjoint cover, balance, elastic re-merge."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition
+
+
+def _sim(seed, n=12):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=(n, n))
+    s = (s + s.T) / 2
+    np.fill_diagonal(s, 0)
+    return s
+
+
+@given(st.integers(0, 10_000), st.integers(2, 6))
+@settings(max_examples=25, deadline=None)
+def test_clusters_partition_variables(seed, k):
+    sim = _sim(seed)
+    clusters = partition.variable_clusters(sim, k)
+    assert len(clusters) == k
+    flat = sorted(v for c in clusters for v in c)
+    assert flat == list(range(sim.shape[0]))
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_edge_subsets_disjoint_cover(seed, k):
+    n = 10
+    clusters = partition.variable_clusters(_sim(seed, n), k)
+    masks = partition.edge_subsets(clusters, n)
+    total = masks.sum(axis=0)
+    off_diag = ~np.eye(n, dtype=bool)
+    assert np.all(total[off_diag] == 1)      # every edge in exactly one subset
+    assert np.all(total[~off_diag] == 0)
+
+
+def test_edge_subsets_balanced():
+    n = 16
+    clusters = [[i] for i in range(n)][:4]
+    clusters = [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9, 10, 11], [12, 13, 14, 15]]
+    masks = partition.edge_subsets(clusters, n)
+    sizes = masks.sum(axis=(1, 2))
+    assert sizes.max() - sizes.min() <= 0.25 * sizes.max()
+
+
+@given(st.integers(0, 10_000), st.integers(3, 5))
+@settings(max_examples=15, deadline=None)
+def test_remerge_failed_preserves_cover(seed, k):
+    n = 9
+    clusters = partition.variable_clusters(_sim(seed, n), k)
+    masks = partition.edge_subsets(clusters, n)
+    failed = seed % k
+    out = partition.remerge_failed(masks, failed)
+    assert out.shape[0] == k - 1
+    off = ~np.eye(n, dtype=bool)
+    assert np.all(out.sum(axis=0)[off] == 1)
+
+
+def test_partition_edges_end_to_end(small_data, small_bn):
+    masks = partition.partition_edges(small_data, small_bn.arities, 3)
+    n = small_bn.n
+    off = ~np.eye(n, dtype=bool)
+    assert masks.shape == (3, n, n)
+    assert np.all(masks.sum(axis=0)[off] == 1)

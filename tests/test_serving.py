@@ -1,0 +1,88 @@
+"""Serving path: prefill/decode consistency, greedy loop, cache shapes."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer
+from repro.serving import build_prefill_step, build_serve_step, greedy_decode
+
+
+def test_greedy_decode_runs_and_is_deterministic():
+    cfg = get_smoke_config("qwen2_7b")
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    B, S = 2, 32
+    cache = transformer.init_cache(cfg, B, S)
+    tok0 = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    out1, _ = greedy_decode(cfg, params, cache, tok0, 0, 8)
+    cache2 = transformer.init_cache(cfg, B, S)
+    out2, _ = greedy_decode(cfg, params, cache2, tok0, 0, 8)
+    assert out1.shape == (B, 8)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.vocab  # vocab padding never sampled
+
+
+def test_prefill_step_matches_forward_last_token():
+    cfg = dataclasses.replace(get_smoke_config("gemma_7b"),
+                              param_dtype="float32", compute_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = transformer.init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+    pre = build_prefill_step(cfg)(params, {"tokens": tokens})
+    full, _ = transformer.forward(cfg, params, tokens)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_serve_step_advances_cache():
+    cfg = get_smoke_config("zamba2_7b")
+    key = jax.random.PRNGKey(2)
+    params = transformer.init_params(key, cfg)
+    B, S = 1, 16
+    cache = transformer.init_cache(cfg, B, S)
+    step = jax.jit(build_serve_step(cfg))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits1, cache = step(params, cache, tok, jnp.int32(0))
+    logits2, cache = step(params, cache, tok, jnp.int32(1))
+    assert logits1.shape == (B, cfg.vocab_pad)
+    # SSM state must actually change between steps
+    assert not np.allclose(np.asarray(logits1), np.asarray(logits2))
+
+
+def test_whisper_decode_uses_cross_cache():
+    cfg = dataclasses.replace(get_smoke_config("whisper_base"),
+                              param_dtype="float32", compute_dtype="float32")
+    key = jax.random.PRNGKey(3)
+    params = transformer.init_params(key, cfg)
+    B, S = 1, 8
+    cache = transformer.init_cache(cfg, B, S)
+    # fill cross-attention cache from a (stub) encoder output
+    frames = jax.random.normal(key, (B, cfg.frontend_tokens,
+                                     cfg.frontend_dim), jnp.float32)
+    enc = transformer.encode(cfg, params, frames)
+    from repro.models.layers import attention
+    # precompute xk/xv rows per decoder layer (projection of enc output)
+    import jax.numpy as jnp2
+    xks, xvs = [], []
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], params["dec_layers"])
+        k = jnp2.einsum("btd,dhk->bthk", enc, lp["xattn"]["wk"])
+        v = jnp2.einsum("btd,dhk->bthk", enc, lp["xattn"]["wv"])
+        xks.append(k)
+        xvs.append(v)
+    cache["xk"] = jnp2.stack(xks)
+    cache["xv"] = jnp2.stack(xvs)
+    tok = jnp2.zeros((B, 1), jnp2.int32)
+    logits, cache2 = transformer.decode_step(cfg, params, cache, tok,
+                                             jnp2.int32(0))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # zero cross cache must give different logits (cross-attn is live)
+    cache["xk"] = jnp2.zeros_like(cache["xk"])
+    cache["xv"] = jnp2.zeros_like(cache["xv"])
+    logits0, _ = transformer.decode_step(cfg, params, cache, tok,
+                                         jnp2.int32(0))
+    assert not np.allclose(np.asarray(logits), np.asarray(logits0))
