@@ -3,9 +3,16 @@ CPU + analytic flops.  Interpret-mode timing measures correctness-path cost,
 not TPU performance — the TPU-relevant numbers are the roofline terms in
 EXPERIMENTS.md; this harness checks call overhead and validates shapes at
 benchmark scale.
+
+``--sweep-json PATH`` additionally times the fused all-candidate BDeu
+insert-sweep (one contraction per child) against the per-candidate loop
+engine at paper scale and writes a machine-readable trajectory record —
+later PRs diff this file to track the sweep's perf over time.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -36,6 +43,19 @@ def bench_all():
         rows.append((f"bdeu_count/{impl}", us,
                      "m=5000 q=4096 r=4; flops≈%.2e" % (2 * 5000 * 4096)))
 
+    # bdeu_sweep: fused all-candidate sweep counts, pallas-interp vs jnp ref
+    from repro.kernels.bdeu_sweep import sweep_counts
+    ks = jax.random.split(key, 3)
+    cfg0 = jax.random.randint(ks[0], (2560,), 0, 128, dtype=jnp.int32)
+    childv = jax.random.randint(ks[1], (2560,), 0, 3, dtype=jnp.int32)
+    datav = jax.random.randint(ks[2], (2560, 64), 0, 3, dtype=jnp.int32)
+    for impl, use_ref in (("pallas_interp", False), ("jnp_ref", True)):
+        us = _time(lambda a, b, c: sweep_counts(
+            a, b, c, max_q=128, r_max=3, use_ref=use_ref), cfg0, childv, datav)
+        rows.append((f"bdeu_sweep/{impl}", us,
+                     "m=2560 n=64 q=128 r=3; flops≈%.2e"
+                     % (2 * 2560 * 128 * 64 * 3)))
+
     # flash attention: one 1k x 1k head block
     from repro.kernels.flash_attention import flash_attention
     q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
@@ -60,9 +80,72 @@ def bench_all():
     return rows
 
 
+def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
+                seed: int = 0, reps: int = 3) -> dict:
+    """Fused vs per-candidate-loop insert-sweep delta column at paper scale.
+
+    Times one child's full candidate column (n family scores): the loop
+    engine dispatches n independent contingency builds; the fused engine one
+    joint contraction (jnp: one segment-sum; kernel: r_max matmuls).  CPU
+    wall time — the dispatch-count ratio is the hardware-independent part.
+    """
+    from repro.core.ges import _insert_delta_column
+
+    rng = np.random.default_rng(seed)
+    arities = rng.integers(2, 4, size=n)
+    data = np.stack([rng.integers(0, a, size=m) for a in arities], 1)
+    adj = np.zeros((n, n), dtype=np.int8)
+    adj[1, 0] = adj[2, 0] = 1          # child 0 with two parents (q0 <= 9)
+    r_max = int(arities.max())
+    dj = jnp.asarray(data.astype(np.int32))
+    aj = jnp.asarray(arities.astype(np.int32))
+    adjj = jnp.asarray(adj)
+
+    rec = {"n": n, "m": m, "max_q": max_q, "r_max": r_max,
+           "platform": jax.default_backend(),
+           # Static program-structure counts (not runtime counters): the loop
+           # engine builds one (max_q, r_max) contingency table per candidate
+           # (on TPU: n bdeu_count kernel launches per column); the fused
+           # engine builds ALL candidate tables in one joint contraction (one
+           # grid-batched bdeu_sweep launch / one segment-sum in the timed
+           # jnp CPU mirrors below).
+           "sweep_table_builds": {"loop_segment": n, "fused": 1},
+           "dispatch_ratio": n,
+           "engines": {}}
+    for name, impl in (("loop_segment", "segment"), ("fused", "fused")):
+        us = _time(lambda a: _insert_delta_column(
+            dj, aj, adjj, a, 10.0, max_q, r_max, impl), jnp.int32(0),
+            reps=reps)
+        rec["engines"][name] = {
+            "sweep_us": round(us, 1),
+            "score_evals_per_s": round(n / (us * 1e-6), 1),
+        }
+    rec["speedup_fused_vs_loop"] = round(
+        rec["engines"]["loop_segment"]["sweep_us"]
+        / rec["engines"]["fused"]["sweep_us"], 2)
+    return rec
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep-json", default=None,
+                    help="also run the fused-vs-loop sweep bench at paper "
+                         "scale and write the record to this path")
+    ap.add_argument("--sweep-n", type=int, default=400)
+    ap.add_argument("--sweep-m", type=int, default=5000)
+    args = ap.parse_args()
     for name, us, derived in bench_all():
         print(f"{name},{us:.0f},{derived}")
+    if args.sweep_json:
+        rec = bench_sweep(n=args.sweep_n, m=args.sweep_m)
+        with open(args.sweep_json, "w") as f:
+            json.dump(rec, f, indent=2)
+            f.write("\n")
+        print(f"bdeu_sweep/loop,{rec['engines']['loop_segment']['sweep_us']:.0f},"
+              f"n={rec['n']} m={rec['m']}")
+        print(f"bdeu_sweep/fused,{rec['engines']['fused']['sweep_us']:.0f},"
+              f"speedup={rec['speedup_fused_vs_loop']}x "
+              f"dispatch_ratio={rec['dispatch_ratio']}x")
 
 
 if __name__ == "__main__":

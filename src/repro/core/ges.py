@@ -40,7 +40,10 @@ class GESConfig:
     ess: float = 10.0
     max_parents: int = 6          # static parent-set bound for the device engine
     max_q: int = 4096             # dense contingency-table row bound
-    counts_impl: str = "segment"  # "segment" | "onehot" | "pallas"
+    # per-family engines: "segment" | "onehot" | "pallas";
+    # fused insert-sweep engines (one contraction per child, not n):
+    # "fused" (jnp) | "fused_pallas" (kernels/bdeu_sweep)
+    counts_impl: str = "segment"
     tol: float = 1e-9             # minimum improvement to keep going
     incremental: bool = True      # column-cached delta rescoring
     child_chunk: Optional[int] = None  # sequential chunking of full sweeps
@@ -56,10 +59,21 @@ class GESConfig:
 
 @partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl"))
 def _insert_delta_column(data, arities, adj, y, ess, max_q, r_max, counts_impl):
-    """(n,) deltas for inserting x -> y, all x."""
+    """(n,) deltas for inserting x -> y, all x.
+
+    With a fused counts_impl the whole column is ONE joint contraction
+    (bdeu.fused_insert_scores) instead of n per-candidate table builds.
+    Entries at invalid candidates (x == y, x already a parent) are garbage
+    under both engines — with slightly different conventions — and are
+    masked by every caller before use.
+    """
     n = adj.shape[0]
     pm = adj.astype(bool)[:, y]
     base = bdeu.local_score_masked(data, arities, y, pm, ess, max_q, r_max, counts_impl)
+
+    if counts_impl in bdeu.FUSED_IMPLS:
+        return bdeu.fused_insert_scores(
+            data, arities, y, pm, ess, max_q, r_max, counts_impl) - base
 
     def per_parent(x):
         return bdeu.local_score_masked(
@@ -78,10 +92,21 @@ def _delta_column_subset(data, arities, adj, y, pids, ess, max_q, r_max,
     This is the batched-engine realization of the paper's restricted search
     space: a ring process whose E_i allows only W ~ n/k parents per column
     pays W local scores, not n.  Padding convention: pids entries equal to y
-    are self-loops (invalid; caller masks them)."""
+    are self-loops (invalid; caller masks them).
+
+    Fused insert columns compute the full-n joint contraction and gather the
+    W candidates from it — still a single dispatch.  (Tiling the contraction
+    itself down to the W restricted columns is the ROADMAP's next step.)
+    Fused entries at pids already in Pa_y differ from the loop engine's
+    no-op convention; callers mask existing edges before use."""
     pm = adj.astype(bool)[:, y]
     base = bdeu.local_score_masked(data, arities, y, pm, ess, max_q, r_max,
                                    counts_impl)
+
+    if insert and counts_impl in bdeu.FUSED_IMPLS:
+        scores = bdeu.fused_insert_scores(
+            data, arities, y, pm, ess, max_q, r_max, counts_impl)
+        return jnp.take(scores, pids) - base
 
     def per_parent(x):
         return bdeu.local_score_masked(

@@ -27,7 +27,26 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: public top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # pinned jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map across the jax 0.4 -> 0.6 API rename.
+
+    The replication-checker kwarg was renamed ``check_rep`` -> ``check_vma``;
+    we disable it either way (the ring body mixes per-device graph state with
+    replicated data, which the checker mis-flags on older jax).
+    """
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
 
 from . import bdeu
 from .ges import GESConfig, ges_jit_body
@@ -196,11 +215,10 @@ def build_ring_program(mesh: Mesh, spec: RingSpec, config: GESConfig,
     body = partial(_ring_body, spec=spec, config=config, r_max=r_max,
                    add_limit=add_limit)
 
-    mapped = shard_map(
+    mapped = _shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(), P(), P(axis, None, None), P(axis, None, None)),
         out_specs=(P(axis, None, None), P(axis), P()),
-        check_vma=False,
     )
     return jax.jit(mapped)
 

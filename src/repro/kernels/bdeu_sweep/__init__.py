@@ -1,0 +1,3 @@
+from .ops import sweep_counts
+from .ref import sweep_counts_ref
+from .bdeu_sweep import sweep_counts_pallas

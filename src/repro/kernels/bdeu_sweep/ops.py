@@ -1,0 +1,57 @@
+"""Jit'd public wrapper for the bdeu_sweep Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bdeu_sweep import sweep_counts_pallas
+from .ref import sweep_counts_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "tile_n",
+                                   "interpret", "use_ref"))
+def sweep_counts(
+    cfg: jax.Array,
+    child: jax.Array,
+    data: jax.Array,
+    *,
+    max_q: int,
+    r_max: int,
+    tile_m: int = 256,
+    tile_n: int = 32,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """(r_max, max_q, n*r_max) f32 joint sweep counts for one child.
+
+    counts[b, j0, x*r_max + a] = #(child=b, base-config=j0, X_x=a) — every
+    candidate family's contingency table for the FES sweep in one call.
+    Pads m and n to tile multiples with counting-neutral sentinels (cfg=max_q,
+    child/data=r_max: all-zero one-hot rows/columns) and slices the padding
+    back off; the validated Pallas kernel runs in interpret mode on CPU and
+    compiled on TPU.
+    """
+    m, n = data.shape
+    m_pad = _round_up(max(m, tile_m), tile_m)
+    n_pad = _round_up(max(n, tile_n), tile_n)
+    cfg_p = jnp.full((m_pad,), max_q, dtype=jnp.int32).at[:m].set(
+        cfg.astype(jnp.int32))
+    child_p = jnp.full((m_pad,), r_max, dtype=jnp.int32).at[:m].set(
+        child.astype(jnp.int32))
+    data_p = jnp.full((m_pad, n_pad), r_max, dtype=jnp.int32).at[:m, :n].set(
+        data.astype(jnp.int32))
+    if use_ref:
+        counts = sweep_counts_ref(cfg_p, child_p, data_p,
+                                  max_q=max_q, r_max=r_max)
+    else:
+        counts = sweep_counts_pallas(cfg_p, child_p, data_p,
+                                     max_q=max_q, r_max=r_max,
+                                     tile_m=tile_m, tile_n=tile_n,
+                                     interpret=interpret)
+    return counts[:, :, :n * r_max]

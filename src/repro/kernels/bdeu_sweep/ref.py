@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the bdeu_sweep kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sweep_counts_ref(
+    cfg: jax.Array, child: jax.Array, data: jax.Array, *, max_q: int, r_max: int
+) -> jax.Array:
+    """(r_max, max_q, n*r_max) joint counts; out-of-range rows ignored.
+
+    counts[b, j0, x*r_max + a] = #(child=b, cfg0=j0, X_x=a), via one
+    segment-sum of the (m, n*r_max) one-hot over the joint (b, j0) index.
+    """
+    m, n = data.shape
+    oh_all = jax.nn.one_hot(data, r_max, dtype=jnp.float32).reshape(m, n * r_max)
+    valid = (cfg >= 0) & (cfg < max_q) & (child >= 0) & (child < r_max)
+    idx = jnp.where(valid,
+                    jnp.clip(child, 0, r_max - 1) * max_q
+                    + jnp.clip(cfg, 0, max_q - 1),
+                    r_max * max_q)
+    counts = jax.ops.segment_sum(
+        jnp.where(valid[:, None], oh_all, 0.0), idx,
+        num_segments=r_max * max_q + 1)
+    return counts[:r_max * max_q].reshape(r_max, max_q, n * r_max)

@@ -103,6 +103,11 @@ def main():
     ap.add_argument("--limit", action="store_true")
     ap.add_argument("--max-rounds", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--counts-impl", default="segment",
+                    choices=["segment", "onehot", "pallas", "fused",
+                             "fused_pallas"],
+                    help="contingency engine; fused* = one all-candidate "
+                         "contraction per insert-sweep column")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-round", type=int, default=None)
     ap.add_argument("--fail-member", type=int, default=0)
@@ -115,7 +120,7 @@ def main():
     n = bn.n
     print(f"{args.family} scale={args.scale}: n={n}, m={args.m}")
 
-    config = GESConfig(max_q=1024)
+    config = GESConfig(max_q=1024, counts_impl=args.counts_impl)
     masks = partition.partition_edges(data, bn.arities, args.k)
     lim = edge_add_limit(n, args.k) if args.limit else None
     cache = ScoreCache()

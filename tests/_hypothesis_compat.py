@@ -1,0 +1,65 @@
+"""Deterministic fallback for ``hypothesis`` (not installed in this image).
+
+Test modules import ``given / settings / st`` from here.  When the real
+hypothesis package is available it is used verbatim; otherwise a minimal
+deterministic shim replays each property test over a fixed sample sequence:
+the strategy bounds first (lo, hi — the classic edge cases), then seeded
+pseudo-random draws.  The sequence depends only on the example index, so runs
+are reproducible and failures are re-runnable without shrinking machinery.
+
+Only ``st.integers`` is shimmed — the only strategy this suite uses.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 10  # cap: the shim has no shrinking, keep it quick
+
+    class _IntegersStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def example_at(self, i: int, rng) -> int:
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> "_IntegersStrategy":
+            return _IntegersStrategy(min_value, max_value)
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n_ex = min(getattr(fn, "_shim_max_examples", 10),
+                       _FALLBACK_MAX_EXAMPLES)
+
+            # NB: zero-arg wrapper on purpose (and no functools.wraps):
+            # pytest must not see the strategy parameters as fixtures.
+            def wrapper():
+                for i in range(n_ex):
+                    rng = np.random.default_rng(0xBDE0 + 7919 * i)
+                    fn(*(s.example_at(i, rng) for s in strategies))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,7 +1,7 @@
 """DAG utilities: closure, orders, moral graph, CPDAG."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import dag
 

@@ -1,7 +1,7 @@
 """BN fusion (sigma-consistent edge union) invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import dag, fusion
 from repro.core.ring import fuse_jit, gho_order_jit, sigma_consistent_jit

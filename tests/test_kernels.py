@@ -4,9 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.bdeu_count import contingency_counts, contingency_counts_ref
+from repro.kernels.bdeu_sweep import sweep_counts
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
 
@@ -34,6 +35,43 @@ def test_bdeu_count_total_mass():
     counts = contingency_counts(cfg, child, max_q=4, r_max=3)
     assert float(counts.sum()) == 1000.0
     assert float(counts[0, 1]) == 1000.0
+
+
+# ---------------------------------------------------------------------------
+# bdeu_sweep (fused all-candidate contraction)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10**6), st.integers(1, 500), st.integers(2, 5),
+       st.integers(4, 60), st.integers(1, 50))
+@settings(max_examples=15, deadline=None)
+def test_bdeu_sweep_matches_ref(seed, m, r, q, n):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    cfg = jax.random.randint(k1, (m,), 0, q, dtype=jnp.int32)
+    child = jax.random.randint(k2, (m,), 0, r, dtype=jnp.int32)
+    data = jax.random.randint(k3, (m, n), 0, r, dtype=jnp.int32)
+    got = sweep_counts(cfg, child, data, max_q=q, r_max=r,
+                       tile_m=128, tile_n=16)
+    want = sweep_counts(cfg, child, data, max_q=q, r_max=r, use_ref=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bdeu_sweep_total_mass_and_blocks():
+    """Every (b, x) block sums to the number of instances with child=b; the
+    whole tensor sums to m * n (each instance counted once per variable)."""
+    m, n, q, r = 640, 5, 8, 3
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    cfg = jax.random.randint(k1, (m,), 0, q, dtype=jnp.int32)
+    child = jax.random.randint(k2, (m,), 0, r, dtype=jnp.int32)
+    data = jax.random.randint(k3, (m, n), 0, r, dtype=jnp.int32)
+    counts = np.asarray(sweep_counts(cfg, child, data, max_q=q, r_max=r))
+    assert counts.shape == (r, q, n * r)
+    assert float(counts.sum()) == float(m * n)
+    child_np = np.asarray(child)
+    per_b = counts.reshape(r, q, n, r).sum(axis=(1, 3))  # (b, x)
+    for b in range(r):
+        assert np.all(per_b[b] == np.sum(child_np == b))
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """Edge partitioning: disjoint cover, balance, elastic re-merge."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import partition
 
