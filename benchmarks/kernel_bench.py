@@ -4,10 +4,13 @@ not TPU performance — the TPU-relevant numbers are the roofline terms in
 EXPERIMENTS.md; this harness checks call overhead and validates shapes at
 benchmark scale.
 
-``--sweep-json PATH`` additionally times the fused all-candidate BDeu
-insert-sweep (one contraction per child) against the per-candidate loop
-engine at paper scale and writes a machine-readable trajectory record —
-later PRs diff this file to track the sweep's perf over time.
+``--sweep-json PATH`` additionally times the fused all-candidate BDeu sweeps
+against the per-candidate loop engine at paper scale — the FES insert column
+(one joint contraction), the BES delete column (one family-table build,
+marginalized per parent slot) and the restricted-W ring column (contraction
+gathered down to the W = |E_i| candidates before it runs) — and writes a
+machine-readable trajectory record; later PRs diff this file to track the
+sweep's perf over time.
 """
 from __future__ import annotations
 
@@ -81,15 +84,24 @@ def bench_all():
 
 
 def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
-                seed: int = 0, reps: int = 3) -> dict:
-    """Fused vs per-candidate-loop insert-sweep delta column at paper scale.
+                seed: int = 0, reps: int = 3, w: int = 32) -> dict:
+    """Fused vs per-candidate-loop sweep columns at paper scale.
 
-    Times one child's full candidate column (n family scores): the loop
-    engine dispatches n independent contingency builds; the fused engine one
-    joint contraction (jnp: one segment-sum; kernel: r_max matmuls).  CPU
-    wall time — the dispatch-count ratio is the hardware-independent part.
+    Times one child's candidate columns through the unified engine
+    (core/sweeps.sweep): the loop engine dispatches one contingency build
+    per candidate; the fused engines dispatch
+
+    * insert: ONE joint contraction (jnp: one segment-sum; kernel: r_max
+      matmuls),
+    * delete: ONE family-table build, every candidate table read off it by
+      marginalizing one parent slot (zero re-counting),
+    * restricted-W (ring E_i): the insert contraction gathered down to the W
+      candidate columns BEFORE it runs — cost tracks W, not n.
+
+    CPU wall time — the dispatch-count ratio is the hardware-independent
+    part.
     """
-    from repro.core.ges import _insert_delta_column
+    from repro.core.sweeps import sweep
 
     rng = np.random.default_rng(seed)
     arities = rng.integers(2, 4, size=n)
@@ -100,6 +112,11 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
     dj = jnp.asarray(data.astype(np.int32))
     aj = jnp.asarray(arities.astype(np.int32))
     adjj = jnp.asarray(adj)
+    kw = dict(ess=10.0, max_q=max_q, r_max=r_max)
+
+    def col(kind, impl, pids=None):
+        return _time(lambda a: sweep(dj, aj, a, kind=kind, y=0, pids=pids,
+                                     counts_impl=impl, **kw), adjj, reps=reps)
 
     rec = {"n": n, "m": m, "max_q": max_q, "r_max": r_max,
            "platform": jax.default_backend(),
@@ -113,9 +130,7 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
            "dispatch_ratio": n,
            "engines": {}}
     for name, impl in (("loop_segment", "segment"), ("fused", "fused")):
-        us = _time(lambda a: _insert_delta_column(
-            dj, aj, adjj, a, 10.0, max_q, r_max, impl), jnp.int32(0),
-            reps=reps)
+        us = col("insert", impl)
         rec["engines"][name] = {
             "sweep_us": round(us, 1),
             "score_evals_per_s": round(n / (us * 1e-6), 1),
@@ -123,6 +138,38 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
     rec["speedup_fused_vs_loop"] = round(
         rec["engines"]["loop_segment"]["sweep_us"]
         / rec["engines"]["fused"]["sweep_us"], 2)
+
+    # BES delete column: loop = n table builds; fused = ONE family-table
+    # build + an O(n * max_q * r_max) marginalization, no re-counting.
+    rec["delete"] = {"sweep_table_builds": {"loop_segment": n, "fused": 1},
+                     "engines": {}}
+    for name, impl in (("loop_segment", "segment"), ("fused", "fused"),
+                       ("fused_pallas", "fused_pallas")):
+        us = col("delete", impl)
+        rec["delete"]["engines"][name] = {
+            "sweep_us": round(us, 1),
+            "score_evals_per_s": round(n / (us * 1e-6), 1),
+        }
+    rec["delete"]["speedup_fused_vs_loop"] = round(
+        rec["delete"]["engines"]["loop_segment"]["sweep_us"]
+        / rec["delete"]["engines"]["fused"]["sweep_us"], 2)
+
+    # Restricted-W ring column (|E_i| ~ n/k candidates): fused cost must
+    # track W, not n — record the fused full-n column for the scaling ratio.
+    pids = jnp.asarray(rng.choice(np.arange(1, n), size=w, replace=False)
+                       .astype(np.int32))
+    rec["restricted"] = {"W": w, "engines": {}}
+    for name, impl in (("loop_segment", "segment"), ("fused", "fused"),
+                       ("fused_pallas", "fused_pallas")):
+        us = col("insert", impl, pids=pids)
+        rec["restricted"]["engines"][name] = {
+            "sweep_us": round(us, 1),
+            "score_evals_per_s": round(w / (us * 1e-6), 1),
+        }
+    rec["restricted"]["fused_full_n_us"] = rec["engines"]["fused"]["sweep_us"]
+    rec["restricted"]["fused_w_cost_fraction_of_full_n"] = round(
+        rec["restricted"]["engines"]["fused"]["sweep_us"]
+        / rec["engines"]["fused"]["sweep_us"], 3)
     return rec
 
 
@@ -146,6 +193,17 @@ def main():
         print(f"bdeu_sweep/fused,{rec['engines']['fused']['sweep_us']:.0f},"
               f"speedup={rec['speedup_fused_vs_loop']}x "
               f"dispatch_ratio={rec['dispatch_ratio']}x")
+        d = rec["delete"]
+        print(f"bdeu_sweep/delete_loop,"
+              f"{d['engines']['loop_segment']['sweep_us']:.0f},"
+              f"{rec['n']} table builds")
+        print(f"bdeu_sweep/delete_fused,{d['engines']['fused']['sweep_us']:.0f},"
+              f"speedup={d['speedup_fused_vs_loop']}x (1 table build)")
+        s = rec["restricted"]
+        print(f"bdeu_sweep/restricted_fused,"
+              f"{s['engines']['fused']['sweep_us']:.0f},"
+              f"W={s['W']} cost={s['fused_w_cost_fraction_of_full_n']}"
+              f" of full-n fused")
 
 
 if __name__ == "__main__":

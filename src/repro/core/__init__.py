@@ -6,4 +6,5 @@ from .cges import CGESResult, cges, edge_add_limit
 from .partition import partition_edges, variable_clusters, edge_subsets, remerge_failed
 from .fusion import fuse, fusion_edge_union, sigma_consistent, gho_order
 from .ring import RingSpec, ring_cges, build_ring_program, fuse_jit
-from . import bdeu, dag, metrics
+from .sweeps import sweep
+from . import bdeu, dag, metrics, sweeps

@@ -15,12 +15,22 @@ Two mirrored engines with identical semantics:
   (lgamma(a) - lgamma(0 + a) == 0), so dense padding is *exact*, not an
   approximation.
 
-The device engine's FES candidate sweep additionally has a **fused** mode
-(``counts_impl="fused"`` / ``"fused_pallas"``): all n candidate contingency
-tables of a child are produced by ONE joint (child-value-batched) one-hot
-contraction instead of n independent builds — see the "Fused all-candidate
-sweep engine" section below and ``repro.kernels.bdeu_sweep`` for the tiled
-Pallas realization.
+The device engine's candidate sweeps additionally have a **fused** mode
+(``counts_impl="fused"`` / ``"fused_pallas"``):
+
+* insert (FES): all n candidate contingency tables of a child are produced by
+  ONE joint (child-value-batched) one-hot contraction instead of n independent
+  builds — see the "Fused all-candidate sweep engine" section below and
+  ``repro.kernels.bdeu_sweep`` for the tiled Pallas realization.  With a
+  candidate subset ``pids`` (the ring's restricted E_i), the candidate data
+  columns are gathered *before* the contraction so the fused cost scales with
+  W = |pids|, not n.
+* delete (BES): every candidate table ``counts(Pa - {x})`` is a
+  *marginalization* of the ONE current-family (q0, r) table over parent slot
+  x — :func:`fused_delete_scores` builds that table once and reads the whole
+  delete column off it with zero re-counting (n table builds -> 1).
+
+The unified caller-facing layer over these primitives is ``repro.core.sweeps``.
 
 The BDeu local score of child i with parent set Pa (Heckerman et al. 1995):
 
@@ -232,9 +242,10 @@ def _dense_counts_onehot(cfg: Array, child_col: Array, r_max: int, max_q: int) -
 
 FUSED_IMPLS = ("fused", "fused_pallas")
 
-# Fused impls accelerate the *insert sweep*; everywhere a single family is
-# scored (base scores, delete columns, graph totals) they degrade to the
-# matching per-family engine.
+# Fused impls accelerate the *candidate sweeps* (insert + delete); everywhere a
+# single family is scored (base scores, graph totals, the one family-table
+# build of the fused delete sweep) they degrade to the matching per-family
+# engine.
 _SINGLE_IMPL = {"fused": "segment", "fused_pallas": "pallas"}
 
 
@@ -273,6 +284,7 @@ def fused_insert_scores(
     r_max: int,
     counts_impl: str = "fused",
     oh_all: Array | None = None,
+    pids: Array | None = None,
 ) -> Array:
     """(n,) BDeu scores of ALL candidate families (Pa + {x}) for one child.
 
@@ -282,32 +294,131 @@ def fused_insert_scores(
     score(child, Pa + {x}); candidates whose extended parent set overflows
     the static table bound (q0 * r_x > max_q) are -inf.  Entries at
     x == child or x already in Pa are scored with the duplicated slot
-    (q = q0 * r_x) — garbage by convention; callers mask them, exactly as
-    they do for the loop engine's identical convention.
+    (q = q0 * r_x) — garbage by convention; ``repro.core.sweeps`` masks them
+    before any caller sees the column.
+
+    ``pids``: optional (W,) candidate subset — the ring's restricted E_i.
+    The W candidate data columns are gathered BEFORE the joint contraction,
+    so the contraction width (and the (W, Q, R) score slab) scales with W,
+    not n, and the return shape is (W,).
 
     ``oh_all``: optional pre-built :func:`_onehot_all` of ``data`` — full
     sweeps pass it so the child-independent one-hot is built once, not once
-    per mapped child.
+    per mapped child (ignored when ``pids`` is given).
     """
-    n = data.shape[1]
     cfg0, q0 = _slot_encode(data, arities, parent_mask)
     child_col = jnp.take(data, child, axis=1)
     cfg0c = jnp.clip(cfg0, 0, max_q - 1)
-    if counts_impl == "fused_pallas":
-        from ..kernels.bdeu_sweep import sweep_counts
-        counts = sweep_counts(cfg0c, child_col, data, max_q=max_q, r_max=r_max)
+    if pids is None:
+        data_c, ar_c = data, arities
     else:
-        if oh_all is None:
-            oh_all = _onehot_all(data, r_max)
+        data_c = jnp.take(data, pids, axis=1)
+        ar_c = jnp.take(arities, pids)
+    w = data_c.shape[1]
+    if counts_impl == "fused_pallas":
+        from ..kernels.bdeu_sweep import sweep_counts, sweep_counts_restricted
+        if pids is None:
+            counts = sweep_counts(cfg0c, child_col, data,
+                                  max_q=max_q, r_max=r_max)
+        else:
+            counts = sweep_counts_restricted(cfg0c, child_col, data, pids,
+                                             max_q=max_q, r_max=r_max)
+    else:
+        if oh_all is None or pids is not None:
+            oh_all = _onehot_all(data_c, r_max)
         counts = _sweep_counts_segment(cfg0c, child_col, oh_all, max_q, r_max)
     # (b, j0, x, a) -> per-candidate tables (x, (j0, a), b)
-    c4 = counts.reshape(r_max, max_q, n, r_max)
-    slab = c4.transpose(2, 1, 3, 0).reshape(n, max_q * r_max, r_max)
-    q = q0.astype(jnp.float32) * arities.astype(jnp.float32)      # (n,)
+    c4 = counts.reshape(r_max, max_q, w, r_max)
+    slab = c4.transpose(2, 1, 3, 0).reshape(w, max_q * r_max, r_max)
+    q = q0.astype(jnp.float32) * ar_c.astype(jnp.float32)         # (w,)
     scores = _bdeu_from_counts(slab, q, arities[child], ess)
-    log_r = jnp.log(arities.astype(jnp.float32))
-    log_q0 = jnp.sum(jnp.where(parent_mask, log_r, 0.0))
-    ok = (log_q0 + log_r) <= jnp.log(jnp.float32(max_q)) + 1e-4
+    log_q0 = jnp.sum(jnp.where(parent_mask,
+                               jnp.log(arities.astype(jnp.float32)), 0.0))
+    ok = (log_q0 + jnp.log(ar_c.astype(jnp.float32))
+          ) <= jnp.log(jnp.float32(max_q)) + 1e-4
+    return jnp.where(ok, scores, -jnp.inf)
+
+
+def fused_delete_scores(
+    data: Array,
+    arities: Array,
+    child: Array,
+    parent_mask: Array,
+    ess: float,
+    max_q: int,
+    r_max: int,
+    counts_impl: str = "fused",
+    pids: Array | None = None,
+) -> Array:
+    """(n,) BDeu scores of ALL candidate families (Pa - {x}) for one child,
+    from ONE family-table build.
+
+    The BES delete sweep needs counts(Pa - {x}) for every parent x.  Every
+    one of those tables is a *marginalization* of the current-family table:
+    with the radix encoding of :func:`_slot_encode` (slot x has place value
+    low_x = prod_{i>x} ar_i), row j0 decomposes as
+
+        j0 = (hi * ar_x + d_x) * low_x + lo ,
+
+    and summing the child-conditional counts over the digit d_x yields the
+    table of Pa - {x} at rows hi * low_x + lo — an injective relabeling of
+    the reduced configs, and BDeu depends only on the partition the codes
+    induce.  So the whole delete column is ONE (max_q, r_max) table build
+    (O(m), the same cost as the base score) plus an O(n * max_q * r_max)
+    segment-sum with no data re-counting, replacing the loop engine's n
+    per-candidate builds.
+
+    Entry x holds score(child, Pa - {x}); at x not in Pa the marginalization
+    is the identity (phantom arity-1 slot), so the entry equals the current
+    family's score — the loop engine's no-op convention.  Candidates whose
+    *reduced* family still overflows max_q are -inf, the same per-candidate
+    guard convention as :func:`local_score_masked`.  When the current family
+    itself overflows (q0 > max_q — possible only on unguarded init graphs,
+    e.g. ring-fusion unions), the finite entries are clip-corrupted, but the
+    *delta* against the (-inf) base reproduces the loop engine's +/-inf
+    column exactly, so greedy trajectories still agree.
+
+    ``pids``: optional (W,) candidate subset (ring E_i) — only the W
+    marginalization maps are built and the return shape is (W,).
+    """
+    impl = single_impl(counts_impl)
+    cfg0, q0 = _slot_encode(data, arities, parent_mask)
+    child_col = jnp.take(data, child, axis=1)
+    cfg0c = jnp.clip(cfg0, 0, max_q - 1)
+    if impl == "onehot":
+        counts0 = _dense_counts_onehot(cfg0c, child_col, r_max, max_q)
+    elif impl == "pallas":
+        from ..kernels.bdeu_count import contingency_counts
+        counts0 = contingency_counts(cfg0c, child_col, max_q=max_q, r_max=r_max)
+    else:
+        counts0 = _dense_counts_segment(cfg0c, child_col, r_max, max_q)
+
+    slot_ar = jnp.where(parent_mask, arities, 1).astype(jnp.int32)   # (n,)
+    # place value of slot x under the _slot_encode scan: prod_{i > x} ar_i
+    low = jnp.concatenate(
+        [jnp.cumprod(slot_ar[::-1])[::-1][1:], jnp.ones(1, jnp.int32)])
+    if pids is not None:
+        slot_ar = jnp.take(slot_ar, pids)
+        low = jnp.take(low, pids)
+    w = slot_ar.shape[0]
+
+    j0 = jnp.arange(max_q, dtype=jnp.int32)[None, :]                 # (1, Q)
+    low_c = low[:, None]
+    hi = j0 // (low_c * slot_ar[:, None])
+    lo = j0 % low_c
+    mapped = hi * low_c + lo                                         # (w, Q)
+    flat = (jnp.arange(w, dtype=jnp.int32)[:, None] * max_q + mapped)
+    tiled = jnp.broadcast_to(counts0, (w,) + counts0.shape)
+    slab = jax.ops.segment_sum(
+        tiled.reshape(w * max_q, r_max), flat.reshape(-1),
+        num_segments=w * max_q).reshape(w, max_q, r_max)
+
+    q_del = (q0 // slot_ar).astype(jnp.float32)                      # (w,)
+    scores = _bdeu_from_counts(slab, q_del, arities[child], ess)
+    log_q0 = jnp.sum(jnp.where(parent_mask,
+                               jnp.log(arities.astype(jnp.float32)), 0.0))
+    ok = (log_q0 - jnp.log(slot_ar.astype(jnp.float32))
+          ) <= jnp.log(jnp.float32(max_q)) + 1e-4
     return jnp.where(ok, scores, -jnp.inf)
 
 
@@ -451,6 +562,14 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
 
         return jax.vmap(per_parent)(jnp.arange(n, dtype=jnp.int32)) - b
 
+    def per_child_delete_fused(args):
+        """Fused delete sweep: ONE family-table build per child; every
+        candidate table is a marginalization of it over one parent slot
+        (see fused_delete_scores) — zero re-counting for the whole column."""
+        y, pm, b = args
+        return fused_delete_scores(
+            data, arities, y, pm, ess, max_q, r_max, counts_impl) - b
+
     def per_child_delete(args):
         y, pm, b = args
 
@@ -464,17 +583,19 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
     if insert:
         per_child = (per_child_insert_fused if counts_impl in FUSED_IMPLS
                      else per_child_insert_loop)
-        if counts_impl == "fused" and child_chunk is None:
-            # A fused child sweep is already one full-width contraction with
-            # an (r_max * max_q, n * r_max) counts intermediate; map children
-            # sequentially so that intermediate exists for one child at a
-            # time instead of vmapping it n-wide (n^2-scale peak memory).
-            # ("fused_pallas" is exempt: pallas_call in interpret mode cannot
-            # trace lax.map's zero-size remainder batch on jax 0.4.x —
-            # callers bound its memory with an explicit child_chunk.)
-            child_chunk = 1
     else:
-        per_child = per_child_delete
+        per_child = (per_child_delete_fused if counts_impl in FUSED_IMPLS
+                     else per_child_delete)
+    if counts_impl == "fused" and child_chunk is None:
+        # A fused child sweep materializes a per-child slab — insert: the
+        # (r_max * max_q, n * r_max) joint counts; delete: the (n, max_q,
+        # r_max) marginalization stack.  Map children sequentially so that
+        # slab exists for one child at a time instead of vmapping it n-wide
+        # (n^2-scale peak memory).  ("fused_pallas" is exempt: pallas_call
+        # in interpret mode cannot trace lax.map's zero-size remainder batch
+        # on jax 0.4.x — callers bound its memory with an explicit
+        # child_chunk.)
+        child_chunk = 1
 
     def base_for(ch, masks):
         return family_scores_batch(

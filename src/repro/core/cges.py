@@ -18,10 +18,17 @@ Engines:
   * engine="jax": each process's GES is the fully-compiled ges_jit program —
     the building block the shard_map ring uses on device meshes.
 
-Both engines honour ``GESConfig.counts_impl``; with a fused impl ("fused" /
-"fused_pallas") every insert-sweep column a ring process scores is ONE joint
-contraction over all candidates instead of one table build per candidate
-(see bdeu.fused_insert_scores) — the decisive constant factor for the paper's
+Both engines rescore exclusively through the unified sweep engine
+(``core/sweeps.sweep``) and honour ``GESConfig.counts_impl``; with a fused
+impl ("fused" / "fused_pallas") every column a ring process scores is fused:
+insert columns are ONE joint contraction over the candidates
+(bdeu.fused_insert_scores), and delete columns are ONE family-table build
+marginalized per parent slot (bdeu.fused_delete_scores) — instead of one
+table build per candidate in either phase.  On the host engine each process
+additionally passes its ``pids`` subset, so the fused contraction is
+restricted to the W = |E_i| candidate columns *before* it runs; the
+fixed-shape ``engine="jax"`` / shard_map-ring program sweeps full-n columns
+and masks afterwards.  That constant factor is decisive for the paper's
 n ~ 1000 workloads.
 """
 from __future__ import annotations

@@ -17,8 +17,8 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
-from . import bdeu
 from .ges import GESConfig, GESResult, ges_host
+from .sweeps import sweep
 
 
 def fges_host(
@@ -28,12 +28,14 @@ def fges_host(
 ) -> GESResult:
     m, n = data.shape
     r_max = int(arities.max())
-    # First pass: pairwise deltas from the empty graph (one batched sweep).
-    d0 = np.asarray(bdeu.insert_deltas(
+    # First pass: pairwise deltas from the empty graph (one batched sweep
+    # through the unified engine; illegal entries come back -inf).
+    d0 = np.asarray(sweep(
         jnp.asarray(data.astype(np.int32)),
         jnp.asarray(arities.astype(np.int32)),
         jnp.zeros((n, n), dtype=jnp.int8),
-        config.ess, config.max_q, r_max, config.counts_impl,
+        kind="insert", ess=config.ess, max_q=config.max_q, r_max=r_max,
+        counts_impl=config.counts_impl,
     ))
     effect = d0 > config.tol
     np.fill_diagonal(effect, False)

@@ -17,6 +17,12 @@ Two drivers with identical greedy trajectories:
   sweep is the parallel part, here a single batched tensor op.
 * :func:`ges_jit` — the whole FES+BES search as one jit-compiled
   ``lax.while_loop`` program (fixed shapes), used inside the shard_map ring.
+
+All candidate rescoring — FES insert columns, BES delete columns, restricted
+E_i subsets, full delta matrices — goes through the unified engine in
+:mod:`repro.core.sweeps` (``sweep(kind="insert"|"delete", pids=...)``), which
+dispatches to the loop / fused-jnp / fused-Pallas backend named by
+``GESConfig.counts_impl``.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 
 from . import bdeu
 from .dag import closure_after_edge, transitive_closure, transitive_closure_np
+from .sweeps import sweep, sweep_column_body, sweep_matrix_body
 
 Array = jax.Array
 NEG_INF = -jnp.inf
@@ -40,9 +47,10 @@ class GESConfig:
     ess: float = 10.0
     max_parents: int = 6          # static parent-set bound for the device engine
     max_q: int = 4096             # dense contingency-table row bound
-    # per-family engines: "segment" | "onehot" | "pallas";
-    # fused insert-sweep engines (one contraction per child, not n):
-    # "fused" (jnp) | "fused_pallas" (kernels/bdeu_sweep)
+    # per-family loop engines: "segment" | "onehot" | "pallas";
+    # fused sweep engines (insert: one contraction per child; delete: one
+    # family-table build per child — not n either way):
+    # "fused" (jnp) | "fused_pallas" (kernels/bdeu_sweep + bdeu_count)
     counts_impl: str = "segment"
     tol: float = 1e-9             # minimum improvement to keep going
     incremental: bool = True      # column-cached delta rescoring
@@ -54,82 +62,10 @@ class GESConfig:
 
 
 # ---------------------------------------------------------------------------
-# Column-level delta rescoring (shared by both drivers)
+# Column-level delta rescoring — all of it goes through core/sweeps.sweep:
+# one API, kind="insert"|"delete", optional pids restriction, engine-masked
+# columns identical under the loop and fused backends.
 # ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl"))
-def _insert_delta_column(data, arities, adj, y, ess, max_q, r_max, counts_impl):
-    """(n,) deltas for inserting x -> y, all x.
-
-    With a fused counts_impl the whole column is ONE joint contraction
-    (bdeu.fused_insert_scores) instead of n per-candidate table builds.
-    Entries at invalid candidates (x == y, x already a parent) are garbage
-    under both engines — with slightly different conventions — and are
-    masked by every caller before use.
-    """
-    n = adj.shape[0]
-    pm = adj.astype(bool)[:, y]
-    base = bdeu.local_score_masked(data, arities, y, pm, ess, max_q, r_max, counts_impl)
-
-    if counts_impl in bdeu.FUSED_IMPLS:
-        return bdeu.fused_insert_scores(
-            data, arities, y, pm, ess, max_q, r_max, counts_impl) - base
-
-    def per_parent(x):
-        return bdeu.local_score_masked(
-            data, arities, y, pm.at[x].set(True), ess, max_q, r_max, counts_impl
-        )
-
-    return jax.vmap(per_parent)(jnp.arange(n, dtype=jnp.int32)) - base
-
-
-@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl",
-                                   "insert"))
-def _delta_column_subset(data, arities, adj, y, pids, ess, max_q, r_max,
-                         counts_impl, insert):
-    """(W,) deltas for toggling x -> y over a candidate SUBSET pids.
-
-    This is the batched-engine realization of the paper's restricted search
-    space: a ring process whose E_i allows only W ~ n/k parents per column
-    pays W local scores, not n.  Padding convention: pids entries equal to y
-    are self-loops (invalid; caller masks them).
-
-    Fused insert columns compute the full-n joint contraction and gather the
-    W candidates from it — still a single dispatch.  (Tiling the contraction
-    itself down to the W restricted columns is the ROADMAP's next step.)
-    Fused entries at pids already in Pa_y differ from the loop engine's
-    no-op convention; callers mask existing edges before use."""
-    pm = adj.astype(bool)[:, y]
-    base = bdeu.local_score_masked(data, arities, y, pm, ess, max_q, r_max,
-                                   counts_impl)
-
-    if insert and counts_impl in bdeu.FUSED_IMPLS:
-        scores = bdeu.fused_insert_scores(
-            data, arities, y, pm, ess, max_q, r_max, counts_impl)
-        return jnp.take(scores, pids) - base
-
-    def per_parent(x):
-        return bdeu.local_score_masked(
-            data, arities, y, pm.at[x].set(insert), ess, max_q, r_max,
-            counts_impl)
-
-    return jax.vmap(per_parent)(pids) - base
-
-
-@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl"))
-def _delete_delta_column(data, arities, adj, y, ess, max_q, r_max, counts_impl):
-    """(n,) deltas for deleting x -> y, all x (garbage where no edge)."""
-    n = adj.shape[0]
-    pm = adj.astype(bool)[:, y]
-    base = bdeu.local_score_masked(data, arities, y, pm, ess, max_q, r_max, counts_impl)
-
-    def per_parent(x):
-        return bdeu.local_score_masked(
-            data, arities, y, pm.at[x].set(False), ess, max_q, r_max, counts_impl
-        )
-
-    return jax.vmap(per_parent)(jnp.arange(n, dtype=jnp.int32)) - base
-
 
 def _q_guard_np(adj: np.ndarray, arities: np.ndarray, max_q: int) -> np.ndarray:
     """Boolean (n, n) matrix: True where adding x->y keeps q_y <= max_q."""
@@ -227,37 +163,28 @@ def ges_host(
         col[y] = -np.inf                     # self-pad stays invalid
         return col
 
-    def ins_col(a, y):
+    def _col(kind, cache_key, a, y, n_evals):
         nonlocal evals
 
         def compute():
             nonlocal evals
-            evals += int(allowed_cost[y])
-            vals = _delta_column_subset(
-                data_j, ar_j, jnp.asarray(a), jnp.int32(y), pid_j[y],
-                cfg.ess, cfg.max_q, r_max, cfg.counts_impl, True)
+            evals += n_evals
+            vals = sweep(data_j, ar_j, jnp.asarray(a), kind=kind, y=y,
+                         pids=pid_j[y], ess=cfg.ess, max_q=cfg.max_q,
+                         r_max=r_max, counts_impl=cfg.counts_impl)
             return _scatter(y, vals)
 
         if cache is not None:
-            return cache.column("ins", y, a, compute,
+            return cache.column(cache_key, y, a, compute,
                                 scope=allowed_np[:, y].tobytes())
         return compute()
+
+    def ins_col(a, y):
+        return _col("insert", "ins", a, y, int(allowed_cost[y]))
 
     def del_col(a, y):
-        nonlocal evals
-
-        def compute():
-            nonlocal evals
-            evals += int(np.sum(allowed_np[:, y] & (a[:, y] > 0)))
-            vals = _delta_column_subset(
-                data_j, ar_j, jnp.asarray(a), jnp.int32(y), pid_j[y],
-                cfg.ess, cfg.max_q, r_max, cfg.counts_impl, False)
-            return _scatter(y, vals)
-
-        if cache is not None:
-            return cache.column("del", y, a, compute,
-                                scope=allowed_np[:, y].tobytes())
-        return compute()
+        return _col("delete", "del", a, y,
+                    int(np.sum(allowed_np[:, y] & (a[:, y] > 0))))
 
     n_ins = 0
     n_del = 0
@@ -346,24 +273,24 @@ def ges_jit_body(data, arities, init_adj, allowed, add_limit,
     log_max_q = jnp.log(jnp.float32(max_q)) + 1e-6
 
     def full_insert_D(adj):
-        return bdeu.insert_deltas(data, arities, adj, ess, max_q, r_max,
-                                  counts_impl, child_chunk,
-                                  axis_name=axis_model,
-                                  axis_size=axis_model_size)
+        return sweep_matrix_body(data, arities, adj, ess, max_q, r_max,
+                                 counts_impl, "insert", child_chunk,
+                                 axis_name=axis_model,
+                                 axis_size=axis_model_size)
 
     def full_delete_D(adj):
-        return bdeu.delete_deltas(data, arities, adj, ess, max_q, r_max,
-                                  counts_impl, child_chunk,
-                                  axis_name=axis_model,
-                                  axis_size=axis_model_size)
+        return sweep_matrix_body(data, arities, adj, ess, max_q, r_max,
+                                 counts_impl, "delete", child_chunk,
+                                 axis_name=axis_model,
+                                 axis_size=axis_model_size)
 
     def ins_col(adj, y):
-        return _insert_delta_column.__wrapped__(
-            data, arities, adj, y, ess, max_q, r_max, counts_impl)
+        return sweep_column_body(data, arities, adj, y, None, ess, max_q,
+                                 r_max, counts_impl, "insert")
 
     def del_col(adj, y):
-        return _delete_delta_column.__wrapped__(
-            data, arities, adj, y, ess, max_q, r_max, counts_impl)
+        return sweep_column_body(data, arities, adj, y, None, ess, max_q,
+                                 r_max, counts_impl, "delete")
 
     # ---------------- FES ----------------
     def fes_cond(state):

@@ -9,7 +9,14 @@ Mapping of the paper's distributed system onto JAX:
                                 the sigma-consistent edge union (GHO ordering
                                 + covered-edge-reversal sink conversion),
                                 mirroring core/fusion.py op-for-op
-  * constrained GES         ->  ges.ges_jit_body (lax.while_loop program)
+  * constrained GES         ->  ges.ges_jit_body (lax.while_loop program);
+                                every candidate rescoring inside it — FES
+                                insert and BES delete columns alike — goes
+                                through the unified core/sweeps engine, so a
+                                fused counts_impl fuses BOTH phases of every
+                                ring process (insert: one contraction per
+                                column; delete: one family-table build per
+                                column, marginalized per parent slot)
   * convergence check       ->  lax.pmax over per-device best scores
 
 The entire learning stage — all rounds, all k processes — is a single

@@ -1,0 +1,182 @@
+"""The unified sweep engine — ONE API for every GES/ring/cGES delta rescoring.
+
+Every rescoring step of the paper's algorithms is a *sweep*: score all
+candidate single-edge changes toward one child (a column) or all children
+(a matrix), as a batched delta against the current graph.  This module is the
+single layer every driver goes through; the per-engine primitives live in
+:mod:`repro.core.bdeu` and :mod:`repro.kernels.bdeu_sweep`.
+
+Mapping of sweep kinds onto the paper (arXiv 2409.13314, Algorithm 1 / §2.2):
+
+* ``kind="insert"`` — the **FES** candidate sweep: deltas for adding x -> y.
+  This is the "evaluate all allowed arcs in parallel" step each ring process
+  performs per round, and the whole of GES's forward stage.
+* ``kind="delete"`` — the **BES** candidate sweep: deltas for removing
+  x -> y.  Runs inside every ring process's constrained GES and in the final
+  unrestricted fine-tuning pass.
+* ``pids`` (candidate subset) — the paper's **restricted edge sets E_i**: a
+  ring process with |E_i| ~ n/k allowed parents per column sweeps only those
+  W candidates, which is the mechanism that makes the ring cheaper than
+  monolithic GES.  ``pids=None`` sweeps all n candidates (the fine-tune /
+  plain-GES case).
+
+Backends (selected by ``counts_impl``):
+
+* ``"segment" | "onehot" | "pallas"`` — the **loop** engine: one contingency
+  table build per candidate (vmapped).
+* ``"fused"`` — jnp segment-sum realizations of the fused sweeps: insert
+  columns from ONE joint child-value-batched contraction
+  (:func:`bdeu.fused_insert_scores`), delete columns from ONE family-table
+  build marginalized over each parent slot
+  (:func:`bdeu.fused_delete_scores`).
+* ``"fused_pallas"`` — same math with the tiled Pallas kernels
+  (``kernels/bdeu_sweep`` for insert contractions, ``kernels/bdeu_count``
+  for the delete sweep's single family table).
+
+Convention (stronger than the raw bdeu primitives): returned columns and
+matrices are **masked** — entries that are not a legal toggle (self-loops,
+inserting an existing edge, deleting a missing edge, candidates outside a
+``pids`` subset's real extent via self-padding) are -inf under EVERY backend,
+so callers cannot select them by forgetting a mask and all backends agree
+entry-for-entry.  Graph-level validity (acyclicity, max_parents, allowed-edge
+sets E_i, q-guard for inserts) remains the caller's mask, as before.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import bdeu
+
+Array = jax.Array
+NEG_INF = -jnp.inf
+
+KINDS = ("insert", "delete")
+
+
+def _check_kind(kind: str) -> bool:
+    if kind not in KINDS:
+        raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+    return kind == "insert"
+
+
+# ---------------------------------------------------------------------------
+# Column sweeps (incremental rescoring: only column y changed)
+# ---------------------------------------------------------------------------
+
+def sweep_column_body(data, arities, adj, y, pids, ess, max_q, r_max,
+                      counts_impl, kind):
+    """Traceable masked delta column — callable from inside jit/shard_map.
+
+    Returns (n,) deltas for toggling x -> y over all candidates x, or (W,)
+    over the ``pids`` subset.  See the module docstring for the masking
+    convention; with a fused ``counts_impl`` the whole column costs one joint
+    contraction (insert) or one family-table build (delete) instead of one
+    table build per candidate.
+    """
+    insert = _check_kind(kind)
+    n = adj.shape[0]
+    pm = adj.astype(bool)[:, y]
+    base = bdeu.local_score_masked(
+        data, arities, y, pm, ess, max_q, r_max, counts_impl)
+    cand = jnp.arange(n, dtype=jnp.int32) if pids is None else pids
+
+    if counts_impl in bdeu.FUSED_IMPLS:
+        fn = bdeu.fused_insert_scores if insert else bdeu.fused_delete_scores
+        deltas = fn(data, arities, y, pm, ess, max_q, r_max, counts_impl,
+                    pids=pids) - base
+    else:
+        def per_parent(x):
+            return bdeu.local_score_masked(
+                data, arities, y, pm.at[x].set(insert), ess, max_q, r_max,
+                counts_impl)
+
+        deltas = jax.vmap(per_parent)(cand) - base
+
+    in_pa = jnp.take(pm, cand)
+    legal = (cand != y) & (~in_pa if insert else in_pa)
+    return jnp.where(legal, deltas, NEG_INF)
+
+
+@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl",
+                                   "kind"))
+def _sweep_column(data, arities, adj, y, pids, ess, max_q, r_max,
+                  counts_impl, kind):
+    return sweep_column_body(data, arities, adj, y, pids, ess, max_q, r_max,
+                             counts_impl, kind)
+
+
+# ---------------------------------------------------------------------------
+# Matrix sweeps (full (n, n) delta matrices: FES/BES initialization)
+# ---------------------------------------------------------------------------
+
+def sweep_matrix_body(data, arities, adj, ess, max_q, r_max, counts_impl,
+                      kind, child_chunk=None, axis_name=None,
+                      axis_size: int = 1):
+    """Traceable masked (n, n) delta matrix D[x, y] for toggling x -> y.
+
+    ``axis_name``/``axis_size``: optional mesh axis over which the child
+    sweep is split (scoring-TP inside a ring process; see bdeu._deltas_impl).
+    """
+    insert = _check_kind(kind)
+    fn = bdeu.insert_deltas if insert else bdeu.delete_deltas
+    D = fn(data, arities, adj, ess, max_q, r_max, counts_impl, child_chunk,
+           axis_name=axis_name, axis_size=axis_size)
+    n = adj.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    has_edge = adj.astype(bool)
+    legal = (~has_edge if insert else has_edge) & ~eye
+    return jnp.where(legal, D, NEG_INF)
+
+
+@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl",
+                                   "kind", "child_chunk"))
+def _sweep_matrix(data, arities, adj, ess, max_q, r_max, counts_impl, kind,
+                  child_chunk):
+    return sweep_matrix_body(data, arities, adj, ess, max_q, r_max,
+                             counts_impl, kind, child_chunk)
+
+
+# ---------------------------------------------------------------------------
+# The single public entry point
+# ---------------------------------------------------------------------------
+
+def sweep(
+    data: Array,
+    arities: Array,
+    adj: Array,
+    *,
+    kind: str,
+    ess: float,
+    max_q: int,
+    r_max: int,
+    counts_impl: str = "segment",
+    y: Optional[int] = None,
+    pids: Optional[Array] = None,
+    child_chunk: Optional[int] = None,
+) -> Array:
+    """Masked BDeu delta sweep — the one API behind GES, the ring, and cGES.
+
+    * ``kind="insert"`` / ``"delete"`` — FES / BES candidate rescoring.
+    * ``y=None`` — full (n, n) delta matrix over all children;
+      ``y=<child>`` — the (n,) column for one child.
+    * ``pids=None`` — all n candidates; ``pids=<(W,) int32>`` — the
+      restricted subset (ring E_i), returning a (W,) column whose cost
+      scales with W under every backend.
+
+    Dispatches to the loop / fused-jnp / fused-Pallas backend named by
+    ``counts_impl``; all backends return identical masked columns (see the
+    module docstring for the -inf convention at illegal toggles).
+    """
+    _check_kind(kind)
+    if y is None:
+        if pids is not None:
+            raise ValueError("pids restriction requires a column sweep "
+                             "(pass y)")
+        return _sweep_matrix(data, arities, adj, ess, max_q, r_max,
+                             counts_impl, kind, child_chunk)
+    return _sweep_column(data, arities, adj, jnp.int32(y), pids, ess, max_q,
+                         r_max, counts_impl, kind)

@@ -1,3 +1,3 @@
-from .ops import sweep_counts
+from .ops import sweep_counts, sweep_counts_restricted
 from .ref import sweep_counts_ref
 from .bdeu_sweep import sweep_counts_pallas

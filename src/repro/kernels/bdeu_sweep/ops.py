@@ -55,3 +55,36 @@ def sweep_counts(
                                      tile_m=tile_m, tile_n=tile_n,
                                      interpret=interpret)
     return counts[:, :, :n * r_max]
+
+
+@partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "tile_n",
+                                   "interpret", "use_ref"))
+def sweep_counts_restricted(
+    cfg: jax.Array,
+    child: jax.Array,
+    data: jax.Array,
+    pids: jax.Array,
+    *,
+    max_q: int,
+    r_max: int,
+    tile_m: int = 256,
+    tile_n: int = 32,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """(r_max, max_q, W*r_max) joint sweep counts over the W candidates in
+    ``pids`` only — the restricted-E_i variant for the ring.
+
+    The candidate data columns are gathered BEFORE the one-hot contraction,
+    so the kernel's candidate axis (grid width, accumulator block and flops)
+    is W, not n: a ring process with |E_i| ~ n/k allowed parents per column
+    pays a W-wide contraction, tracking the partition exactly like the loop
+    engine's W per-candidate table builds.  The column tile is shrunk to the
+    (padded) W so a narrow restriction does not pay a full default tile.
+    """
+    data_w = jnp.take(data, pids, axis=1)
+    w = data_w.shape[1]
+    tn = min(tile_n, _round_up(w, 8))
+    return sweep_counts(cfg, child, data_w, max_q=max_q, r_max=r_max,
+                        tile_m=tile_m, tile_n=tn, interpret=interpret,
+                        use_ref=use_ref)

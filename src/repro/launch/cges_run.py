@@ -106,8 +106,13 @@ def main():
     ap.add_argument("--counts-impl", default="segment",
                     choices=["segment", "onehot", "pallas", "fused",
                              "fused_pallas"],
-                    help="contingency engine; fused* = one all-candidate "
-                         "contraction per insert-sweep column")
+                    help="sweep-engine backend (core/sweeps): loop engines "
+                         "build one table per candidate; fused* build one "
+                         "joint contraction per insert column and one "
+                         "marginalized family table per delete column — on "
+                         "this host-engine driver both are restricted to "
+                         "each process's E_i candidates (pids) before they "
+                         "run")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-round", type=int, default=None)
     ap.add_argument("--fail-member", type=int, default=0)

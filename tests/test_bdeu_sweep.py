@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import GESConfig, bdeu, ges_host, ges_jit
-from repro.core.ges import _delta_column_subset, _insert_delta_column
+from repro.core.sweeps import sweep
 from repro.data.bn import forward_sample, random_bn
 
 FUSED_IMPLS = ["fused", "fused_pallas"]
@@ -104,41 +104,53 @@ def test_fused_overflow_guard_matches_segment(case):
 
 @pytest.mark.parametrize("impl", FUSED_IMPLS)
 def test_fused_subset_column_matches_segment(case, impl):
-    """Restricted-subset (pid_table) columns: fused gather == loop engine at
-    candidates outside Pa_y (existing parents are masked by callers)."""
+    """Restricted-subset (pid_table) columns agree with the loop engine at
+    EVERY entry: the sweep engine masks illegal toggles (self-pads, pids
+    already in Pa_y) to -inf under both backends, so no caller-side masking
+    is needed (regression for the old fused-path convention mismatch)."""
     bn, data = case
     dj, aj = _jnp_inputs(bn, data)
     n = bn.n
     adj = np.zeros((n, n), dtype=np.int8)
     adj[0, 3] = 1
     y = 3
-    pids = np.array([1, 2, 5, 7, 9, y, y], dtype=np.int32)  # self-padded tail
-    args = (dj, aj, jnp.asarray(adj), jnp.int32(y), jnp.asarray(pids))
-    kw = dict(ess=10.0, max_q=256, r_max=int(bn.arities.max()), insert=True)
-    col_seg = np.asarray(_delta_column_subset(*args, counts_impl="segment", **kw))
-    col_fus = np.asarray(_delta_column_subset(*args, counts_impl=impl, **kw))
-    valid = (pids != y) & (adj[pids, y] == 0)
-    assert np.allclose(col_seg[valid], col_fus[valid], rtol=1e-4, atol=2e-3)
+    # pids include an existing parent (0) and self-padded tail entries
+    pids = np.array([1, 0, 2, 5, 7, 9, y, y], dtype=np.int32)
+    kw = dict(kind="insert", y=y, pids=jnp.asarray(pids), ess=10.0,
+              max_q=256, r_max=int(bn.arities.max()))
+    col_seg = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                               counts_impl="segment", **kw))
+    col_fus = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                               counts_impl=impl, **kw))
+    illegal = (pids == y) | (adj[pids, y] > 0)
+    assert np.all(np.isneginf(col_seg[illegal]))
+    assert np.all(np.isneginf(col_fus[illegal]))
+    assert np.allclose(col_seg[~illegal], col_fus[~illegal],
+                       rtol=1e-4, atol=2e-3)
 
 
 def test_fused_incremental_column_matches_segment(case):
-    """_insert_delta_column (the incremental rescoring hot path) agrees
-    across engines at valid candidates."""
+    """The incremental column-rescoring hot path (sweep with y, no pids)
+    agrees across engines at every entry (illegal ones are -inf in both)."""
     bn, data = case
     dj, aj = _jnp_inputs(bn, data)
     n = bn.n
     adj = np.zeros((n, n), dtype=np.int8)
     adj[4, 1] = 1
     y = 1
-    kw = dict(ess=10.0, max_q=256, r_max=int(bn.arities.max()))
-    col_seg = np.asarray(_insert_delta_column(
-        dj, aj, jnp.asarray(adj), jnp.int32(y), counts_impl="segment", **kw))
-    col_fus = np.asarray(_insert_delta_column(
-        dj, aj, jnp.asarray(adj), jnp.int32(y), counts_impl="fused", **kw))
-    valid = np.ones(n, dtype=bool)
-    valid[y] = False
-    valid[adj[:, y] > 0] = False
-    assert np.allclose(col_seg[valid], col_fus[valid], rtol=1e-4, atol=2e-3)
+    kw = dict(kind="insert", y=y, ess=10.0, max_q=256,
+              r_max=int(bn.arities.max()))
+    col_seg = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                               counts_impl="segment", **kw))
+    col_fus = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                               counts_impl="fused", **kw))
+    illegal = np.zeros(n, dtype=bool)
+    illegal[y] = True
+    illegal[adj[:, y] > 0] = True
+    assert np.all(np.isneginf(col_seg[illegal]))
+    assert np.all(np.isneginf(col_fus[illegal]))
+    assert np.allclose(col_seg[~illegal], col_fus[~illegal],
+                       rtol=1e-4, atol=2e-3)
 
 
 def test_ges_jit_trajectory_identity_across_impls(case):

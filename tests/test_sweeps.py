@@ -1,0 +1,276 @@
+"""Unified sweep engine (core/sweeps): fused BES delete-by-marginalization
+equality vs the loop engine (mixed arities, padded r_max, empty parent set,
+max_q guard), restricted-W columns, masked-convention regressions, and ring
+trajectory invariance across counts_impls."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bdeu, sweeps
+from repro.core.sweeps import sweep
+from repro.data.bn import forward_sample, random_bn
+
+FUSED_IMPLS = ["fused", "fused_pallas"]
+
+
+@pytest.fixture(scope="module")
+def mixed_case():
+    """Mixed arities with most columns below r_max (dense-padding exercised)."""
+    rng = np.random.default_rng(5)
+    arities = np.array([2, 3, 4, 2, 3, 2, 4, 2, 3, 2], dtype=np.int64)
+    n = arities.size
+    data = np.stack([rng.integers(0, a, size=900) for a in arities], 1)
+    return data.astype(np.int64), arities
+
+
+def _jnp(data, arities):
+    return (jnp.asarray(data.astype(np.int32)),
+            jnp.asarray(arities.astype(np.int32)))
+
+
+def _delete_col(data, arities, adj, y, impl, max_q=256, pids=None):
+    dj, aj = _jnp(data, arities)
+    return np.asarray(sweep(
+        dj, aj, jnp.asarray(adj), kind="delete", y=y, pids=pids, ess=10.0,
+        max_q=max_q, r_max=int(arities.max()), counts_impl=impl))
+
+
+# ---------------------------------------------------------------------------
+# Fused BES delete: one family-table build, marginalized per parent slot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", FUSED_IMPLS)
+def test_delete_column_matches_host_oracle(mixed_case, impl):
+    """Fused delete deltas == exact host-oracle deltas at every parent."""
+    data, arities = mixed_case
+    n = arities.size
+    adj = np.zeros((n, n), dtype=np.int8)
+    pa = [1, 2, 6]                       # arities 3, 4, 4 -> q0 = 48
+    adj[pa, 0] = 1
+    col = _delete_col(data, arities, adj, 0, impl)
+    base = bdeu.local_score_np(data, arities, 0, pa)
+    for x in range(n):
+        if adj[x, 0]:
+            want = bdeu.local_score_np(
+                data, arities, 0, [p for p in pa if p != x]) - base
+            assert np.isclose(col[x], want, rtol=2e-5, atol=1e-3), x
+        else:
+            assert np.isneginf(col[x])   # illegal toggle, engine-masked
+
+
+@pytest.mark.parametrize("impl", FUSED_IMPLS)
+def test_delete_column_matches_loop_engine(mixed_case, impl):
+    """Fused == loop delete column entry-for-entry (both engine-masked)."""
+    data, arities = mixed_case
+    n = arities.size
+    adj = np.zeros((n, n), dtype=np.int8)
+    adj[[0, 4, 8], 3] = 1
+    adj[[2, 5], 7] = 1
+    for y in (3, 7):
+        col_loop = _delete_col(data, arities, adj, y, "segment")
+        col_fus = _delete_col(data, arities, adj, y, impl)
+        assert np.array_equal(np.isneginf(col_loop), np.isneginf(col_fus))
+        f = np.isfinite(col_loop)
+        assert np.allclose(col_loop[f], col_fus[f], rtol=1e-4, atol=2e-3)
+
+
+def test_delete_column_empty_parent_set(mixed_case):
+    """With Pa_y empty every delete is illegal: whole column -inf, no NaNs,
+    identical under every backend."""
+    data, arities = mixed_case
+    n = arities.size
+    adj = np.zeros((n, n), dtype=np.int8)
+    for impl in ["segment"] + FUSED_IMPLS:
+        col = _delete_col(data, arities, adj, 2, impl)
+        assert np.all(np.isneginf(col)), impl
+        assert not np.isnan(col).any(), impl
+
+
+def test_delete_column_max_q_guard(mixed_case):
+    """Candidates whose REDUCED family still overflows max_q are -inf with
+    the loop engine's exact guard convention; deletes that fit are finite."""
+    data, arities = mixed_case
+    n = arities.size
+    adj = np.zeros((n, n), dtype=np.int8)
+    pa = [1, 2, 6]                        # q0 = 3*4*4 = 48
+    adj[pa, 0] = 1
+    # max_q = 24: the family itself overflows; removing x=1 leaves q=16 (ok),
+    # removing x=2 or x=6 leaves q=12 (ok) -> deltas vs the -inf base are
+    # +inf under BOTH engines (identical trajectory decisions), and the
+    # engines' +/-inf patterns must agree entry-for-entry.
+    col_loop = _delete_col(data, arities, adj, 0, "segment", max_q=24)
+    col_fus = _delete_col(data, arities, adj, 0, "fused", max_q=24)
+    assert np.array_equal(np.isposinf(col_loop), np.isposinf(col_fus))
+    assert np.array_equal(np.isneginf(col_loop), np.isneginf(col_fus))
+    assert np.isposinf(col_loop[np.asarray(pa)]).all()
+    # max_q = 12: removing one arity-4 parent leaves q=12 (fits: +inf delta
+    # vs the -inf base) but removing the arity-3 parent leaves q=16 -> the
+    # REDUCED family is guarded -inf too, and -inf - (-inf) = NaN under both
+    # engines — the guard conventions must agree entry-for-entry.
+    col_loop = _delete_col(data, arities, adj, 0, "segment", max_q=12)
+    col_fus = _delete_col(data, arities, adj, 0, "fused", max_q=12)
+    assert np.array_equal(np.isposinf(col_loop), np.isposinf(col_fus))
+    assert np.array_equal(np.isnan(col_loop), np.isnan(col_fus))
+    assert np.isnan(col_loop[1]) and np.isnan(col_fus[1])
+    assert np.isposinf(col_fus[2]) and np.isposinf(col_fus[6])
+
+
+@pytest.mark.parametrize("impl", FUSED_IMPLS)
+def test_delete_matrix_matches_loop_engine(mixed_case, impl):
+    """Full (n, n) BES delta matrix through the unified engine: fused ==
+    loop everywhere (the ges_jit BES initialization path)."""
+    data, arities = mixed_case
+    n = arities.size
+    rng = np.random.default_rng(1)
+    adj = np.zeros((n, n), dtype=np.int8)
+    for y in range(n):
+        for x in rng.choice(n, size=2, replace=False):
+            if x != y:
+                adj[x, y] = 1
+    dj, aj = _jnp(data, arities)
+    kw = dict(kind="delete", ess=10.0, max_q=256, r_max=int(arities.max()))
+    D_loop = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                              counts_impl="segment", **kw))
+    D_fus = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                             counts_impl=impl, **kw))
+    assert np.array_equal(np.isneginf(D_loop), np.isneginf(D_fus))
+    f = np.isfinite(D_loop)
+    assert np.allclose(D_loop[f], D_fus[f], rtol=1e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Restricted-W columns (ring E_i subsets)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["insert", "delete"])
+@pytest.mark.parametrize("impl", FUSED_IMPLS)
+def test_restricted_column_matches_loop(mixed_case, kind, impl):
+    """(W,) restricted columns agree with the loop engine entry-for-entry,
+    including illegal pids (self-pads, wrong edge state) masked to -inf."""
+    data, arities = mixed_case
+    n = arities.size
+    adj = np.zeros((n, n), dtype=np.int8)
+    adj[[1, 4], 0] = 1
+    y = 0
+    pids = jnp.asarray(np.array([1, 3, 4, 7, 9, y, y], dtype=np.int32))
+    dj, aj = _jnp(data, arities)
+    kw = dict(kind=kind, y=y, pids=pids, ess=10.0, max_q=256,
+              r_max=int(arities.max()))
+    col_loop = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                                counts_impl="segment", **kw))
+    col_fus = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                               counts_impl=impl, **kw))
+    assert col_fus.shape == (7,)
+    assert np.array_equal(np.isneginf(col_loop), np.isneginf(col_fus))
+    f = np.isfinite(col_loop)
+    assert f.any()
+    assert np.allclose(col_loop[f], col_fus[f], rtol=1e-4, atol=2e-3)
+
+
+def test_restricted_kernel_contracts_w_columns_not_n(mixed_case):
+    """The restricted Pallas variant's counts slab is (r_max, max_q,
+    W*r_max): the contraction width — and hence fused cost — scales with the
+    candidate subset W, not the full n."""
+    from repro.kernels.bdeu_sweep import sweep_counts, sweep_counts_restricted
+
+    data, arities = mixed_case
+    dj, aj = _jnp(data, arities)
+    r_max = int(arities.max())
+    m, n = data.shape
+    cfg = jnp.zeros((m,), jnp.int32)
+    child = dj[:, 0]
+    pids = jnp.asarray(np.array([1, 3, 4], dtype=np.int32))
+    full = sweep_counts(cfg, child, dj, max_q=32, r_max=r_max)
+    sub = sweep_counts_restricted(cfg, child, dj, pids, max_q=32, r_max=r_max)
+    assert full.shape == (r_max, 32, n * r_max)
+    assert sub.shape == (r_max, 32, 3 * r_max)
+    # gathered-before-contraction == gathered-after-contraction
+    want = np.asarray(full).reshape(r_max, 32, n, r_max)[:, :, np.asarray(pids)]
+    assert np.array_equal(np.asarray(sub).reshape(r_max, 32, 3, r_max), want)
+
+
+def test_sweep_matrix_rejects_pids():
+    data = np.zeros((4, 3), dtype=np.int64)
+    ar = np.full(3, 2)
+    dj, aj = _jnp(data, ar)
+    with pytest.raises(ValueError):
+        sweep(dj, aj, jnp.zeros((3, 3), jnp.int8), kind="insert",
+              pids=jnp.arange(2), ess=10.0, max_q=8, r_max=2)
+    with pytest.raises(ValueError):
+        sweep(dj, aj, jnp.zeros((3, 3), jnp.int8), kind="reverse",
+              ess=10.0, max_q=8, r_max=2)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end trajectory invariance
+# ---------------------------------------------------------------------------
+
+def test_ges_host_bes_trajectory_identity(mixed_case):
+    """A BES-heavy host run (dense init graph) takes the identical greedy
+    delete trajectory under the loop and fused engines."""
+    from repro.core import GESConfig, ges_host
+    from repro.core.dag import is_dag_np
+
+    data, arities = mixed_case
+    n = arities.size
+    rng = np.random.default_rng(3)
+    init = np.zeros((n, n), dtype=np.int8)
+    for y in range(1, n):                 # DAG: parents only from lower ids
+        for x in rng.choice(y, size=min(2, y), replace=False):
+            init[x, y] = 1
+    res = {}
+    for impl in ("segment", "fused", "fused_pallas"):
+        res[impl] = ges_host(data, arities, init_adj=init,
+                             config=GESConfig(max_q=256, counts_impl=impl),
+                             phases="bes")
+    assert res["segment"].n_deletes > 0    # the BES phase actually ran
+    for impl in FUSED_IMPLS:
+        assert np.array_equal(res[impl].adj, res["segment"].adj)
+        assert np.isclose(res[impl].score, res["segment"].score, rtol=1e-9)
+    assert is_dag_np(res["segment"].adj)
+
+
+def test_ring_cges_trajectory_invariance():
+    """The full shard_map ring (k=2 devices, FES+BES per process per round)
+    returns IDENTICAL adjacencies under counts_impl='fused' and 'segment'
+    (subprocess: needs a multi-device host platform)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import GESConfig, partition
+        from repro.core.ring import RingSpec, ring_cges
+        from repro.data.bn import forward_sample, random_bn
+
+        rng = np.random.default_rng(2)
+        bn = random_bn(rng, n=8, n_edges=9, max_parents=2)
+        data = forward_sample(bn, 400, rng)
+        masks = partition.partition_edges(data, bn.arities, 2)
+        mesh = Mesh(np.array(jax.devices()[:2]), ("ring",))
+        spec = RingSpec(k=2, max_rounds=3)
+        out = {}
+        for impl in ("segment", "fused"):
+            cfg = GESConfig(max_q=64, counts_impl=impl)
+            graphs, scores, rounds = ring_cges(
+                data, bn.arities, masks, mesh, spec, cfg)
+            out[impl] = (graphs, scores)
+        assert np.array_equal(out["segment"][0], out["fused"][0]), \\
+            (out["segment"][0], out["fused"][0])
+        assert np.allclose(out["segment"][1], out["fused"][1], rtol=1e-6)
+        assert out["segment"][0].any()     # the ring actually learned edges
+        print("RING_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "RING_OK" in r.stdout, r.stderr[-3000:]
