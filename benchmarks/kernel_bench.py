@@ -7,10 +7,12 @@ benchmark scale.
 ``--sweep-json PATH`` additionally times the fused all-candidate BDeu sweeps
 against the per-candidate loop engine at paper scale — the FES insert column
 (one joint contraction), the BES delete column (one family-table build,
-marginalized per parent slot) and the restricted-W ring column (contraction
-gathered down to the W = |E_i| candidates before it runs) — and writes a
-machine-readable trajectory record; later PRs diff this file to track the
-sweep's perf over time.
+marginalized per parent slot), the restricted-W ring column (contraction
+gathered down to the W = |E_i| candidates before it runs) and the
+compiled-ring per-round matrix (``ring_compiled``: the (W, n) pid_table
+sweep the ges_jit/shard_map ring initializes each round from, vs the old
+full-n matrix) — and writes a machine-readable trajectory record; later PRs
+diff this file to track the sweep's perf over time.
 """
 from __future__ import annotations
 
@@ -170,6 +172,37 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
     rec["restricted"]["fused_w_cost_fraction_of_full_n"] = round(
         rec["restricted"]["engines"]["fused"]["sweep_us"]
         / rec["engines"]["fused"]["sweep_us"], 3)
+
+    # Compiled-ring per-round sweep: the (W, n) pid_table matrix that the
+    # ges_jit/shard_map ring now initializes each round from (every child's
+    # W = |E_i| candidates) vs the old full-n (n, n) matrix it used to
+    # sweep-then-mask.  Per-round cost must track W, not n; trajectory
+    # identity to the full-n path is asserted by tests (test_ges /
+    # test_sweeps), this records the cost side.
+    from repro.core.partition import pid_table_from_allowed
+
+    allowed = np.zeros((n, n), dtype=bool)
+    for y in range(n):
+        cand = rng.choice(np.delete(np.arange(n), y), size=w, replace=False)
+        allowed[cand, y] = True
+    tbl = jnp.asarray(pid_table_from_allowed(allowed))
+
+    def mat(impl, pid_table=None):
+        # multi-rep like every other sweep entry: later PRs diff this ratio,
+        # and a single sample of a multi-second sweep is scheduler-noise
+        return _time(lambda a: sweep(dj, aj, a, kind="insert",
+                                     pid_table=pid_table, counts_impl=impl,
+                                     **kw), adjj, reps=reps)
+
+    full_us = mat("fused")
+    res_us = mat("fused", pid_table=tbl)
+    rec["ring_compiled"] = {
+        "W": w, "w_over_n": round(w / n, 3),
+        "counts_impl": "fused",
+        "full_n_round_us": round(full_us, 1),
+        "restricted_round_us": round(res_us, 1),
+        "w_cost_fraction_of_full_n": round(res_us / full_us, 3),
+    }
     return rec
 
 
@@ -204,6 +237,10 @@ def main():
               f"{s['engines']['fused']['sweep_us']:.0f},"
               f"W={s['W']} cost={s['fused_w_cost_fraction_of_full_n']}"
               f" of full-n fused")
+        r = rec["ring_compiled"]
+        print(f"bdeu_sweep/ring_compiled,{r['restricted_round_us']:.0f},"
+              f"(W,n) pid_table round W={r['W']} "
+              f"cost={r['w_cost_fraction_of_full_n']} of full-n round")
 
 
 if __name__ == "__main__":

@@ -31,9 +31,13 @@ masks = partition.partition_edges(data, bn.arities, K)
 mesh = make_host_mesh(K, axis="ring")
 print(f"mesh: {mesh} (ring of {K} devices)")
 
+# ring_cges derives per-process (n, W) pid_tables from the E_i masks, so
+# every compiled round sweeps W = |E_i| candidates per column, not n.
+pid_tables = partition.pid_tables(masks)
+print(f"restricted sweep width: W={pid_tables.shape[2]} vs n={bn.n}")
 graphs, scores, rounds = ring_cges(
     data, bn.arities, masks, mesh, RingSpec(k=K, max_rounds=8), config,
-    add_limit=edge_add_limit(bn.n, K))
+    add_limit=edge_add_limit(bn.n, K), pid_tables=pid_tables)
 best = int(np.argmax(scores))
 print(f"ring converged in {rounds} rounds; "
       f"per-process BDeu: {[round(float(s), 1) for s in scores]}")

@@ -3,7 +3,8 @@ learning of Bayesian networks with GES guarantees."""
 from .ges import GESConfig, GESResult, ScoreCache, ges_host, ges_jit
 from .fges import fges_host
 from .cges import CGESResult, cges, edge_add_limit
-from .partition import partition_edges, variable_clusters, edge_subsets, remerge_failed
+from .partition import (partition_edges, variable_clusters, edge_subsets,
+                        remerge_failed, pid_table_from_allowed, pid_tables)
 from .fusion import fuse, fusion_edge_union, sigma_consistent, gho_order
 from .ring import RingSpec, ring_cges, build_ring_program, fuse_jit
 from .sweeps import sweep

@@ -146,19 +146,20 @@ def _slot_encode(data: Array, arities: Array, parent_mask: Array):
     # bound (max_q << 2^31); overflowing candidates are masked to -inf by the
     # log-domain guard in local_score_masked, and their (wrapped) cfg values
     # are clipped before counting, so they never corrupt memory or counts.
+    #
+    # Fully vectorized (no sequential scan over the n slots): the Horner
+    # recurrence cfg = ((0*ar_0 + v_0)*ar_1 + v_1)... expands to
+    # sum_i v_i * prod_{j>i} ar_j, and int32 arithmetic is exact modular
+    # arithmetic, so the place-value sum is BITWISE identical to the scan it
+    # replaces — including on wrapping (guarded) parent sets.  This keeps the
+    # per-column cost of a *restricted* W-wide sweep from being dominated by
+    # an O(n)-step sequential encode.
     slot_ar = jnp.where(parent_mask, arities, 1).astype(jnp.int32)
     slot_val = jnp.where(parent_mask[None, :], data, 0).astype(jnp.int32)
-
-    def body(carry, xs):
-        cfg, q = carry
-        val, ar = xs
-        return (cfg * ar + val, q * ar), None
-
-    (cfg, q), _ = jax.lax.scan(
-        body,
-        (jnp.zeros(data.shape[0], dtype=jnp.int32), jnp.int32(1)),
-        (slot_val.T, slot_ar),
-    )
+    rev = jnp.cumprod(slot_ar[::-1])                 # prod of trailing slots
+    q = rev[-1]
+    low = jnp.concatenate([rev[::-1][1:], jnp.ones(1, jnp.int32)])
+    cfg = (slot_val * low[None, :]).sum(axis=1, dtype=jnp.int32)
     return cfg, q
 
 
@@ -241,6 +242,20 @@ def _dense_counts_onehot(cfg: Array, child_col: Array, r_max: int, max_q: int) -
 # child sweep, ~3 ms at 100 Tflop/s).
 
 FUSED_IMPLS = ("fused", "fused_pallas")
+
+# Every legal sweep backend.  Dispatch sites fall through to the segment
+# engine for anything unrecognized, so entry points (GESConfig, sweeps.sweep)
+# validate against this list up front — a typo'd impl (e.g. in the CI
+# matrix's REPRO_COUNTS_IMPL) must fail loudly, not silently run "segment".
+COUNTS_IMPLS = ("segment", "onehot", "pallas") + FUSED_IMPLS
+
+
+def check_counts_impl(counts_impl: str) -> str:
+    if counts_impl not in COUNTS_IMPLS:
+        raise ValueError(
+            f"unknown counts_impl {counts_impl!r}; valid: {COUNTS_IMPLS} "
+            f"(did REPRO_COUNTS_IMPL or a config typo sneak through?)")
+    return counts_impl
 
 # Fused impls accelerate the *candidate sweeps* (insert + delete); everywhere a
 # single family is scored (base scores, graph totals, the one family-table
@@ -422,6 +437,68 @@ def fused_delete_scores(
     return jnp.where(ok, scores, -jnp.inf)
 
 
+def loop_insert_scores(
+    data: Array,
+    arities: Array,
+    child: Array,
+    parent_mask: Array,
+    ess: float,
+    max_q: int,
+    r_max: int,
+    counts_impl: str = "segment",
+    pids: Array | None = None,
+) -> Array:
+    """Loop-engine insert sweep with INCREMENTAL config encoding: scores of
+    the candidate families (Pa + {x}) for one child, one contingency-table
+    build per candidate.
+
+    The parent-set radix code cfg0 is built once per child; each candidate
+    extends it as ``cfg0 * r_x + X_x`` — O(m) per candidate instead of
+    re-encoding all n slots.  BDeu depends only on the partition the codes
+    induce (any injective relabeling gives identical counts), so the
+    non-canonical code order is exact.
+
+    This is THE loop-engine insert-column primitive: both the full (n, n)
+    delta matrix (bdeu._deltas_impl) and the per-column/restricted sweeps
+    (core/sweeps.sweep_column_body) call it, so full-n and pid-restricted
+    programs see BITWISE-identical candidate scores — which the compiled
+    ring's full-n tie-breaking argmax relies on (ges._masked_argmax_mapped).
+
+    ``pids``: optional (W,) candidate subset — only those candidates are
+    scored and the return shape is (W,).  Entries at x == child or x already
+    in Pa are scored with the duplicated slot (garbage by convention, masked
+    by callers); candidates whose extended family overflows max_q are -inf.
+    """
+    impl = single_impl(counts_impl)
+    cfg0, q0 = _slot_encode(data, arities, parent_mask)
+    child_col = jnp.take(data, child, axis=1)
+    r = arities[child]
+    log_q0 = jnp.sum(jnp.where(parent_mask,
+                               jnp.log(arities.astype(jnp.float32)), 0.0))
+    log_max = jnp.log(jnp.float32(max_q)) + 1e-4
+    cand = (jnp.arange(data.shape[1], dtype=jnp.int32) if pids is None
+            else pids)
+
+    def per_parent(x):
+        ar_x = arities[x]
+        cfg = cfg0 * ar_x + jnp.take(data, x, axis=1)
+        q = q0 * ar_x
+        cfgc = jnp.clip(cfg, 0, max_q - 1)
+        if impl == "onehot":
+            counts = _dense_counts_onehot(cfgc, child_col, r_max, max_q)
+        elif impl == "pallas":
+            from ..kernels.bdeu_count import contingency_counts
+            counts = contingency_counts(cfgc, child_col,
+                                        max_q=max_q, r_max=r_max)
+        else:
+            counts = _dense_counts_segment(cfgc, child_col, r_max, max_q)
+        score = _bdeu_from_counts(counts, q, r, ess)
+        ok = (log_q0 + jnp.log(arities[x].astype(jnp.float32))) <= log_max
+        return jnp.where(ok, score, -jnp.inf)
+
+    return jax.vmap(per_parent)(cand)
+
+
 def local_score_masked(
     data: Array,
     arities: Array,
@@ -528,39 +605,13 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
             oh_all=oh_all) - b
 
     def per_child_insert_loop(args):
-        """Insert sweep with INCREMENTAL config encoding: the parent-set
-        radix code cfg0 is built once per child (O(n*m)); each candidate
-        extends it as cfg0 * r_x + X_x — O(m) per candidate instead of
-        re-scanning all n variables.  BDeu depends only on the partition
-        induced by the codes (any injective relabeling gives identical
-        counts), so the non-canonical code order is exact.
-        """
+        """Insert sweep via the ONE loop-engine primitive
+        (:func:`loop_insert_scores`): incremental config encoding, one
+        table build per candidate — shared with the per-column/restricted
+        sweeps so full-n and restricted programs agree bitwise."""
         y, pm, b = args
-        cfg0, q0 = _slot_encode(data, arities, pm)
-        child_col = jnp.take(data, y, axis=1)
-        r = arities[y]
-        log_q0 = jnp.sum(jnp.where(pm, jnp.log(arities.astype(jnp.float32)),
-                                   0.0))
-        log_max = jnp.log(jnp.float32(max_q)) + 1e-4
-
-        def per_parent(x):
-            ar_x = arities[x]
-            cfg = cfg0 * ar_x + jnp.take(data, x, axis=1)
-            q = q0 * ar_x
-            cfgc = jnp.clip(cfg, 0, max_q - 1)
-            if counts_impl == "onehot":
-                counts = _dense_counts_onehot(cfgc, child_col, r_max, max_q)
-            elif counts_impl == "pallas":
-                from ..kernels.bdeu_count import contingency_counts
-                counts = contingency_counts(cfgc, child_col,
-                                            max_q=max_q, r_max=r_max)
-            else:
-                counts = _dense_counts_segment(cfgc, child_col, r_max, max_q)
-            score = _bdeu_from_counts(counts, q, r, ess)
-            ok = (log_q0 + jnp.log(arities[x].astype(jnp.float32))) <= log_max
-            return jnp.where(ok, score, -jnp.inf)
-
-        return jax.vmap(per_parent)(jnp.arange(n, dtype=jnp.int32)) - b
+        return loop_insert_scores(
+            data, arities, y, pm, ess, max_q, r_max, counts_impl) - b
 
     def per_child_delete_fused(args):
         """Fused delete sweep: ONE family-table build per child; every

@@ -24,12 +24,13 @@ impl ("fused" / "fused_pallas") every column a ring process scores is fused:
 insert columns are ONE joint contraction over the candidates
 (bdeu.fused_insert_scores), and delete columns are ONE family-table build
 marginalized per parent slot (bdeu.fused_delete_scores) — instead of one
-table build per candidate in either phase.  On the host engine each process
-additionally passes its ``pids`` subset, so the fused contraction is
-restricted to the W = |E_i| candidate columns *before* it runs; the
-fixed-shape ``engine="jax"`` / shard_map-ring program sweeps full-n columns
-and masks afterwards.  That constant factor is decisive for the paper's
-n ~ 1000 workloads.
+table build per candidate in either phase.  BOTH engines sweep W-wide: the
+host engine gathers each column down to its ``pids`` subset before scoring,
+and ``engine="jax"`` passes each process's static (n, W) pid_table
+(partition.pid_tables) into the compiled ges_jit while_loop, so the
+fixed-shape program's per-round cost also tracks W = |E_i|, not n — the
+constant factor that is decisive for the paper's n ~ 1000 workloads.  The
+unrestricted fine-tuning pass stays full-n by construction (E = all edges).
 """
 from __future__ import annotations
 
@@ -103,6 +104,11 @@ def cges(
     data_j = jnp.asarray(data.astype(np.int32))
     ar_j = jnp.asarray(arities.astype(np.int32))
     r_max = int(arities.max())
+    # Static per-process E_i candidate tables (one shared W so all k
+    # processes reuse ONE compiled ges_jit program): the compiled engine
+    # sweeps W-wide end-to-end, mirroring the host engine's pids gather.
+    pid_j = (jnp.asarray(partition.pid_tables(edge_masks))
+             if engine == "jax" else None)
 
     # ---- Stage 2: ring learning ------------------------------------------
     rounds = 0
@@ -122,10 +128,12 @@ def cges(
                 adj_i, score_i, n_ins, n_del = ges_jit(
                     data_j, ar_j, jnp.asarray(init),
                     jnp.asarray(edge_masks[i].astype(np.int8)),
-                    add_limit=add_limit, config=config, r_max=r_max)
+                    add_limit=add_limit, config=config, r_max=r_max,
+                    pid_table=pid_j[i])
                 adj_i = np.asarray(adj_i)
                 score_i = float(score_i)
-                evals += n * n + n * (int(n_ins) + int(n_del))
+                W = int(pid_j.shape[2])
+                evals += W * n + W * (int(n_ins) + int(n_del))
             else:
                 res = ges_host(data, arities, init_adj=init,
                                allowed=edge_masks[i], add_limit=add_limit,

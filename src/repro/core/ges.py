@@ -23,10 +23,19 @@ E_i subsets, full delta matrices — goes through the unified engine in
 :mod:`repro.core.sweeps` (``sweep(kind="insert"|"delete", pids=...)``), which
 dispatches to the loop / fused-jnp / fused-Pallas backend named by
 ``GESConfig.counts_impl``.
+
+Both drivers pay W-wide restricted sweeps when given the E_i candidate
+table: :func:`ges_host` gathers each column down to its ``pids`` subset, and
+:func:`ges_jit` threads a static (n, W) ``pid_table`` through its whole
+``lax.while_loop`` program — delta state, argmax, apply and incremental
+rescoring all live in (W, n) index space, so the compiled ring's per-round
+cost tracks W = |E_i|, not n (the paper's core cost argument, end-to-end
+compiled).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Optional
 
@@ -36,7 +45,9 @@ import jax.numpy as jnp
 
 from . import bdeu
 from .dag import closure_after_edge, transitive_closure, transitive_closure_np
-from .sweeps import sweep, sweep_column_body, sweep_matrix_body
+from .partition import pid_table_from_allowed
+from .sweeps import (sweep, sweep_column_body, sweep_matrix_body,
+                     sweep_matrix_restricted_body)
 
 Array = jax.Array
 NEG_INF = -jnp.inf
@@ -50,11 +61,19 @@ class GESConfig:
     # per-family loop engines: "segment" | "onehot" | "pallas";
     # fused sweep engines (insert: one contraction per child; delete: one
     # family-table build per child — not n either way):
-    # "fused" (jnp) | "fused_pallas" (kernels/bdeu_sweep + bdeu_count)
-    counts_impl: str = "segment"
+    # "fused" (jnp) | "fused_pallas" (kernels/bdeu_sweep + bdeu_count).
+    # The default honours REPRO_COUNTS_IMPL so CI can run the whole tier-1
+    # suite under an alternate backend (the fused-matrix CI leg).
+    counts_impl: str = os.environ.get("REPRO_COUNTS_IMPL", "segment")
     tol: float = 1e-9             # minimum improvement to keep going
     incremental: bool = True      # column-cached delta rescoring
     child_chunk: Optional[int] = None  # sequential chunking of full sweeps
+
+    def __post_init__(self):
+        # Fail loudly on unknown backends: the dispatch chains fall through
+        # to "segment", so a typo (config or REPRO_COUNTS_IMPL) would
+        # otherwise silently run the wrong engine.
+        bdeu.check_counts_impl(self.counts_impl)
 
     def static_key(self):
         return (self.ess, self.max_parents, self.max_q, self.counts_impl,
@@ -148,12 +167,7 @@ def ges_host(
     # jit shapes).  This is where the ring's speedup physically comes from —
     # a process pays |E_i|/n per column, not n.
     allowed_cost = allowed_np.sum(axis=0)
-    W = max(1, int(allowed_cost.max()))
-    pid_table = np.full((n, W), 0, dtype=np.int32)
-    for y in range(n):
-        ids = np.flatnonzero(allowed_np[:, y])
-        pid_table[y, :ids.size] = ids
-        pid_table[y, ids.size:] = y          # pad with self (invalid)
+    pid_table = pid_table_from_allowed(allowed_np)
     pid_j = jnp.asarray(pid_table)
 
     def _scatter(y, vals):
@@ -246,50 +260,98 @@ def _masked_argmax(mat: Array):
     return idx, flat[idx]
 
 
+def _masked_argmax_mapped(mat: Array, key: Array, n: int):
+    """Argmax over a (W, n) restricted matrix with FULL-N tie-breaking.
+
+    ``key[w, y] = x*n + y`` is each entry's flat index in the (n, n) space.
+    BDeu is score-equivalent, so exact delta ties (x -> y vs y -> x) are
+    common, and jnp.argmax's first-maximum rule resolves them by position —
+    which differs between (w, y) and (x, y) layouts.  Taking the minimum
+    full-n key among the maxima reproduces the full-n path's tie-break
+    exactly, which is what makes restricted and full-n-masked compiled
+    trajectories identical (asserted by tests).
+    """
+    best = jnp.max(mat)
+    idx = jnp.min(jnp.where(mat == best, key, jnp.int32(n * n)))
+    return jnp.minimum(idx, jnp.int32(n * n - 1)), best
+
+
 @partial(jax.jit, static_argnames=(
     "ess", "max_parents", "max_q", "r_max", "counts_impl", "tol", "incremental",
     "child_chunk"))
-def _ges_jit_impl(data, arities, init_adj, allowed, add_limit,
+def _ges_jit_impl(data, arities, init_adj, allowed, add_limit, pid_table,
                   ess, max_parents, max_q, r_max, counts_impl, tol,
                   incremental, child_chunk):
     return ges_jit_body(data, arities, init_adj, allowed, add_limit,
                         ess, max_parents, max_q, r_max, counts_impl, tol,
-                        incremental, child_chunk)
+                        incremental, child_chunk, pid_table=pid_table)
 
 
 def ges_jit_body(data, arities, init_adj, allowed, add_limit,
                  ess, max_parents, max_q, r_max, counts_impl, tol,
                  incremental, child_chunk=None,
-                 axis_model=None, axis_model_size: int = 1):
+                 axis_model=None, axis_model_size: int = 1,
+                 pid_table=None):
     """Traceable (un-jitted) GES program — callable from inside shard_map.
 
     ``axis_model``: optional mesh axis over which the full candidate sweeps
     are split (scoring-TP inside a ring process; see bdeu._deltas_impl).
+
+    ``pid_table``: optional static (n, W) candidate table (the ring's E_i,
+    self-padded; see partition.pid_table_from_allowed).  When given, the
+    ENTIRE program — the FES/BES initialization matrices, the while_loop's
+    argmax/apply steps and the incremental column rescoring — runs in
+    (W, n) index space: delta state is (W, n), winners map back through the
+    table as ``x = pid_table[y, w]``, and every sweep pays W-wide cost.
+    This is what makes the compiled ring's per-round cost track W = |E_i|
+    instead of n.  ``pid_table=None`` keeps the full-n (n, n) path (the
+    unrestricted fine-tune / plain-GES case).
     """
     n = init_adj.shape[0]
     eye = jnp.eye(n, dtype=bool)
     allowed = allowed.astype(bool) & ~eye
     log_r = jnp.log(arities.astype(jnp.float32))
     log_max_q = jnp.log(jnp.float32(max_q)) + 1e-6
+    restricted = pid_table is not None
+    if restricted:
+        x_of = pid_table.T                        # (W, n): x_of[w, y] = x
+        ycols = jnp.arange(n, dtype=jnp.int32)[None, :]
+        pid_key = x_of.astype(jnp.int32) * n + ycols   # full-n flat indices
+
+        def gather_wy(mat):
+            """(n, n) mask/matrix -> (W, n) entries at [pid_table[y, w], y]."""
+            return mat[x_of, ycols]
 
     def full_insert_D(adj):
+        if restricted:
+            return sweep_matrix_restricted_body(
+                data, arities, adj, pid_table, ess, max_q, r_max,
+                counts_impl, "insert", child_chunk,
+                axis_name=axis_model, axis_size=axis_model_size)
         return sweep_matrix_body(data, arities, adj, ess, max_q, r_max,
                                  counts_impl, "insert", child_chunk,
                                  axis_name=axis_model,
                                  axis_size=axis_model_size)
 
     def full_delete_D(adj):
+        if restricted:
+            return sweep_matrix_restricted_body(
+                data, arities, adj, pid_table, ess, max_q, r_max,
+                counts_impl, "delete", child_chunk,
+                axis_name=axis_model, axis_size=axis_model_size)
         return sweep_matrix_body(data, arities, adj, ess, max_q, r_max,
                                  counts_impl, "delete", child_chunk,
                                  axis_name=axis_model,
                                  axis_size=axis_model_size)
 
     def ins_col(adj, y):
-        return sweep_column_body(data, arities, adj, y, None, ess, max_q,
+        pids = pid_table[y] if restricted else None
+        return sweep_column_body(data, arities, adj, y, pids, ess, max_q,
                                  r_max, counts_impl, "insert")
 
     def del_col(adj, y):
-        return sweep_column_body(data, arities, adj, y, None, ess, max_q,
+        pids = pid_table[y] if restricted else None
+        return sweep_column_body(data, arities, adj, y, pids, ess, max_q,
                                  r_max, counts_impl, "delete")
 
     # ---------------- FES ----------------
@@ -301,11 +363,20 @@ def ges_jit_body(data, arities, init_adj, allowed, add_limit,
         adj, reach, D, n_ins, done = state
         pa_count = adj.sum(axis=0)
         log_q = adj.astype(jnp.float32).T @ log_r
-        q_ok = (log_q[None, :] + log_r[:, None]) <= log_max_q
-        valid = (allowed & ~adj.astype(bool) & ~reach.T
-                 & (pa_count[None, :] < max_parents) & q_ok)
+        if restricted:
+            # same validity predicate as the full-n path, gathered into the
+            # (W, n) index space: entry [w, y] tests x = pid_table[y, w] -> y
+            valid = (gather_wy(allowed & ~adj.astype(bool))
+                     & ~reach[ycols, x_of]          # == (~reach.T)[x, y]
+                     & (pa_count[None, :] < max_parents)
+                     & ((log_q[None, :] + log_r[x_of]) <= log_max_q))
+        else:
+            q_ok = (log_q[None, :] + log_r[:, None]) <= log_max_q
+            valid = (allowed & ~adj.astype(bool) & ~reach.T
+                     & (pa_count[None, :] < max_parents) & q_ok)
         masked = jnp.where(valid, D, NEG_INF)
-        idx, best = _masked_argmax(masked)
+        idx, best = (_masked_argmax_mapped(masked, pid_key, n) if restricted
+                     else _masked_argmax(masked))
         x, y = idx // n, idx % n
         do_apply = (best > tol) & (n_ins < add_limit)
 
@@ -333,8 +404,11 @@ def ges_jit_body(data, arities, init_adj, allowed, add_limit,
     def bes_body(state):
         adj, D, n_del, done = state
         valid = adj.astype(bool) & allowed
+        if restricted:
+            valid = gather_wy(valid)
         masked = jnp.where(valid, D, NEG_INF)
-        idx, best = _masked_argmax(masked)
+        idx, best = (_masked_argmax_mapped(masked, pid_key, n) if restricted
+                     else _masked_argmax(masked))
         x, y = idx // n, idx % n
         do_apply = best > tol
         new_adj = adj.at[x, y].set(jnp.where(do_apply, 0, adj[x, y]))
@@ -361,13 +435,20 @@ def ges_jit(
     add_limit: Optional[int] = None,
     config: GESConfig = GESConfig(),
     r_max: Optional[int] = None,
+    pid_table: Optional[Array] = None,
 ):
-    """Fully-compiled GES. ``add_limit=None`` means unlimited (n^2 cap)."""
+    """Fully-compiled GES. ``add_limit=None`` means unlimited (n^2 cap).
+
+    ``pid_table``: optional (n, W) restricted candidate table — the compiled
+    program then sweeps W-wide end-to-end (see ges_jit_body).  The table must
+    cover ``allowed`` column-for-column (partition.pid_table_from_allowed
+    builds it); candidates absent from the table are never scored.
+    """
     n = init_adj.shape[0]
     lim = jnp.int32(n * n if add_limit is None else add_limit)
     if r_max is None:
         r_max = int(np.asarray(arities).max())
     return _ges_jit_impl(
-        data, arities, init_adj, allowed, lim,
+        data, arities, init_adj, allowed, lim, pid_table,
         config.ess, config.max_parents, config.max_q, r_max,
         config.counts_impl, config.tol, config.incremental, config.child_chunk)

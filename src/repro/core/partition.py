@@ -85,6 +85,55 @@ def edge_subsets(clusters: List[List[int]], n: int) -> np.ndarray:
     return masks
 
 
+def pid_table_from_allowed(allowed: np.ndarray,
+                           width: int | None = None) -> np.ndarray:
+    """Static (n, W) candidate-parent table for one allowed-edge mask.
+
+    Row y lists the candidate parents x with ``allowed[x, y]`` (ascending),
+    padded to the static width W with ``y`` itself — a self-loop, which every
+    sweep masks to -inf, so padding slots can never be selected.  W defaults
+    to the max column occupancy of ``allowed`` (at least 1); it may be forced
+    wider with ``width`` (the ring pads all k processes to one shared W so
+    the shard_map program has a single static shape).
+
+    This is the device-side form of the paper's restricted edge sets E_i:
+    a compiled sweep over the table pays W = |E_i| per column, not n.
+    """
+    allowed = np.asarray(allowed, dtype=bool).copy()
+    n = allowed.shape[0]
+    np.fill_diagonal(allowed, False)
+    occ = int(allowed.sum(axis=0).max()) if n else 0
+    W = max(1, occ) if width is None else int(width)
+    if W < max(1, occ):
+        raise ValueError(f"width {W} < max column occupancy {occ}")
+    if W > n:
+        raise ValueError(f"width {W} exceeds n = {n}")
+    table = np.empty((n, W), dtype=np.int32)
+    for y in range(n):
+        ids = np.flatnonzero(allowed[:, y])
+        table[y, :ids.size] = ids
+        table[y, ids.size:] = y              # self-pad (invalid by convention)
+    return table
+
+
+def pid_tables(edge_masks: np.ndarray, width: int | None = None) -> np.ndarray:
+    """(k, n, W) per-process candidate tables from (k, n, n) edge masks E_i.
+
+    All processes share one static W (the max column occupancy over the whole
+    partition, or ``width``) so the tables can ride a shard_map axis.
+    """
+    k, n, _ = edge_masks.shape
+    masks = np.asarray(edge_masks, dtype=bool)
+    occ = 0
+    for i in range(k):
+        off = masks[i].copy()
+        np.fill_diagonal(off, False)
+        occ = max(occ, int(off.sum(axis=0).max()))
+    W = max(1, occ) if width is None else int(width)
+    return np.stack([pid_table_from_allowed(masks[i], width=W)
+                     for i in range(k)])
+
+
 def remerge_failed(edge_masks: np.ndarray, failed: int) -> np.ndarray:
     """Elastic ring repair: fold a failed member's edge subset into its ring
     predecessor.

@@ -17,6 +17,15 @@ Mapping of the paper's distributed system onto JAX:
                                 ring process (insert: one contraction per
                                 column; delete: one family-table build per
                                 column, marginalized per parent slot)
+  * restricted E_i sweeps   ->  a static per-process (n, W) pid_table
+                                (partition.pid_tables) rides the ring axis
+                                next to the edge masks; ges_jit_body then
+                                runs its whole while_loop in (W, n) index
+                                space, so each compiled process pays
+                                W = |E_i|-wide sweeps per round — the
+                                paper's cost argument, end-to-end compiled
+                                (restricted=False keeps the old
+                                full-n-sweep-then-mask program)
   * convergence check       ->  lax.pmax over per-device best scores
 
 The entire learning stage — all rounds, all k processes — is a single
@@ -55,7 +64,7 @@ def _shard_map_compat(f, *, mesh, in_specs, out_specs):
         return _shard_map(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
 
-from . import bdeu
+from . import partition
 from .ges import GESConfig, ges_jit_body
 
 Array = jax.Array
@@ -164,15 +173,18 @@ class RingSpec:
     axis_model_size: int = 1           # ring process (production mesh: 'model')
 
 
-def _ring_body(data, arities, edge_mask, init_g,
+def _ring_body(data, arities, edge_mask, init_g, pid_table=None,
                *, spec: RingSpec, config: GESConfig, r_max: int,
                add_limit: int):
-    """Per-device body under shard_map.  edge_mask/init_g: (1, n, n) local."""
+    """Per-device body under shard_map.  edge_mask/init_g: (1, n, n) local;
+    pid_table: optional (1, n, W) local — this process's static E_i candidate
+    table, making every sweep of every round W-wide (see ges_jit_body)."""
     axis = spec.axis
     k = spec.k
     n = data.shape[1]
     edge_mask = edge_mask[0]
     g0 = init_g[0]
+    pids = None if pid_table is None else pid_table[0]
 
     perm = [(i, (i + 1) % k) for i in range(k)]  # send to successor
 
@@ -186,45 +198,54 @@ def _ring_body(data, arities, edge_mask, init_g,
             config.counts_impl, config.tol, config.incremental,
             config.child_chunk,
             axis_model=spec.axis_model,
-            axis_model_size=spec.axis_model_size)
+            axis_model_size=spec.axis_model_size,
+            pid_table=pids)
         return adj, score
 
     def cond(state):
-        g, best, go, rnd = state
+        g, g_best, s_best, best, go, rnd = state
         return go & (rnd < spec.max_rounds)
 
     def body(state):
-        g, best, go, rnd = state
+        g, g_best, s_best, best, go, rnd = state
         adj, score = one_round(g)
         round_best = jax.lax.pmax(score, axis)
         improved = round_best > best + config.tol
-        return adj, jnp.maximum(best, round_best), improved, rnd + 1
+        # Keep the graphs of the last GLOBALLY-improving round (Algorithm 1
+        # holds onto the best BN): the final non-improving round's graphs
+        # are discarded, exactly like the host driver's best_adj, so both
+        # engines hand the same winner to the fine-tune pass.
+        g_keep = jnp.where(improved, adj, g_best)
+        s_keep = jnp.where(improved, score, s_best)
+        return (adj, g_keep, s_keep, jnp.maximum(best, round_best),
+                improved, rnd + 1)
 
-    state0 = (g0, -BIG, jnp.bool_(True), jnp.int32(0))
-    g_fin, best, _, rounds = jax.lax.while_loop(cond, body, state0)
-
-    score_fin = bdeu.graph_score_jax(
-        data, arities, g_fin, config.ess, config.max_q, r_max,
-        config.counts_impl)
-    return g_fin[None], score_fin[None], rounds
+    state0 = (g0, g0, -BIG, -BIG, jnp.bool_(True), jnp.int32(0))
+    _, g_best, s_best, _, _, rounds = jax.lax.while_loop(cond, body, state0)
+    return g_best[None], s_best[None], rounds
 
 
 def build_ring_program(mesh: Mesh, spec: RingSpec, config: GESConfig,
-                       r_max: int, add_limit: int):
+                       r_max: int, add_limit: int, restricted: bool = False):
     """Compile-ready cGES stage-2 program for an arbitrary mesh.
 
     The ring axis is ``spec.axis``; data/arities are replicated, edge masks
     and graph state are sharded one-per-ring-slot.  Returns a function
-    (data, arities, edge_masks, init_graphs) -> (graphs, scores, rounds).
+    (data, arities, edge_masks, init_graphs) -> (graphs, scores, rounds);
+    with ``restricted=True`` the program takes a fifth (k, n, W) int32
+    ``pid_tables`` input (partition.pid_tables — one shared static W) and
+    every ring process sweeps W-wide instead of full-n-then-mask.
     """
     axis = spec.axis
 
     body = partial(_ring_body, spec=spec, config=config, r_max=r_max,
                    add_limit=add_limit)
 
+    pid_specs = (P(axis, None, None),) if restricted else ()
     mapped = _shard_map_compat(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None, None), P(axis, None, None)),
+        in_specs=(P(), P(), P(axis, None, None), P(axis, None, None))
+        + pid_specs,
         out_specs=(P(axis, None, None), P(axis), P()),
     )
     return jax.jit(mapped)
@@ -238,18 +259,37 @@ def ring_cges(
     spec: RingSpec,
     config: GESConfig = GESConfig(),
     add_limit: Optional[int] = None,
+    restricted: bool = True,
+    pid_tables: Optional[np.ndarray] = None,
 ):
-    """Execute the compiled ring on a real mesh (k devices)."""
+    """Execute the compiled ring on a real mesh (k devices).
+
+    Returns the per-process (graphs, scores) of the last *globally
+    improving* round — the best BNs Algorithm 1 keeps, identical to the
+    host driver's ``best_adj`` selection — plus the executed round count
+    (which includes the final non-improving round).
+
+    ``restricted=True`` (default) derives per-process (n, W) pid tables from
+    the edge masks (or takes them via ``pid_tables``) so each compiled
+    process pays W = |E_i|-wide sweeps; ``restricted=False`` runs the old
+    full-n-masked program (same trajectories, n-wide per-round cost).
+    """
     k, n, _ = edge_masks.shape
     assert k == spec.k
     r_max = int(arities.max())
     lim = int(n * n if add_limit is None else add_limit)
-    prog = build_ring_program(mesh, spec, config, r_max, lim)
+    prog = build_ring_program(mesh, spec, config, r_max, lim,
+                              restricted=restricted)
     graphs0 = jnp.zeros((k, n, n), dtype=jnp.int8)
-    graphs, scores, rounds = prog(
+    args = [
         jnp.asarray(data.astype(np.int32)),
         jnp.asarray(arities.astype(np.int32)),
         jnp.asarray(edge_masks.astype(np.int8)),
         graphs0,
-    )
+    ]
+    if restricted:
+        if pid_tables is None:
+            pid_tables = partition.pid_tables(edge_masks)
+        args.append(jnp.asarray(np.asarray(pid_tables, dtype=np.int32)))
+    graphs, scores, rounds = prog(*args)
     return np.asarray(graphs), np.asarray(scores), int(rounds)

@@ -19,6 +19,14 @@ Mapping of sweep kinds onto the paper (arXiv 2409.13314, Algorithm 1 / §2.2):
   W candidates, which is the mechanism that makes the ring cheaper than
   monolithic GES.  ``pids=None`` sweeps all n candidates (the fine-tune /
   plain-GES case).
+* ``pid_table`` (static (n, W) candidate table, one ``pids`` row per child —
+  see :func:`repro.core.partition.pid_table_from_allowed`) — the whole-round
+  restricted sweep: a masked **(W, n)** delta matrix whose entry [w, y] is
+  the delta for toggling ``pid_table[y, w] -> y``.  This is what the
+  compiled ``ges_jit``/shard_map-ring path initializes FES/BES from, so the
+  fully-compiled ring pays W-wide matrix sweeps end-to-end instead of
+  sweeping full-n and masking afterwards.  Rows are self-padded (pad slots
+  hold ``y``), and padding comes back -inf like any other illegal toggle.
 
 Backends (selected by ``counts_impl``):
 
@@ -46,6 +54,7 @@ from __future__ import annotations
 from functools import partial
 from typing import Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -61,6 +70,34 @@ def _check_kind(kind: str) -> bool:
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
     return kind == "insert"
+
+
+def _check_pids(pids, n: int, name: str = "pids") -> Array:
+    """Validate a candidate-id vector/table against the variable count n.
+
+    Shape problems (wrong rank, more candidates than variables) and
+    out-of-range ids raise ``ValueError`` immediately instead of flowing into
+    the gather as silent wrong shapes / clamped indices.  Value checks are
+    skipped for traced arrays (inside jit the caller's ids are assumed
+    pre-validated — the public ``sweep`` entry point sees concrete arrays).
+    """
+    pids = jnp.asarray(pids)
+    if not jnp.issubdtype(pids.dtype, jnp.integer):
+        raise ValueError(f"{name} must be integer-typed, got {pids.dtype}")
+    width = pids.shape[-1]
+    if width > n:
+        raise ValueError(
+            f"{name} has {width} candidates per column but only n = {n} "
+            f"variables exist — pad with the child id (self-loop), not by "
+            f"exceeding n")
+    if not isinstance(pids, jax.core.Tracer) and pids.size:
+        vals = np.asarray(pids)
+        if vals.min() < 0 or vals.max() >= n:
+            bad = vals[(vals < 0) | (vals >= n)]
+            raise ValueError(
+                f"{name} contains out-of-range variable ids {bad[:8]} "
+                f"(valid range [0, {n}))")
+    return pids
 
 
 # ---------------------------------------------------------------------------
@@ -88,10 +125,18 @@ def sweep_column_body(data, arities, adj, y, pids, ess, max_q, r_max,
         fn = bdeu.fused_insert_scores if insert else bdeu.fused_delete_scores
         deltas = fn(data, arities, y, pm, ess, max_q, r_max, counts_impl,
                     pids=pids) - base
+    elif insert:
+        # The ONE loop-engine insert primitive (incremental config
+        # encoding) — shared with bdeu._deltas_impl's full matrix, so a
+        # restricted column is bitwise equal to the matching full-n
+        # matrix entries and full-n tie-breaks transfer exactly.
+        deltas = bdeu.loop_insert_scores(
+            data, arities, y, pm, ess, max_q, r_max, counts_impl,
+            pids=pids) - base
     else:
         def per_parent(x):
             return bdeu.local_score_masked(
-                data, arities, y, pm.at[x].set(insert), ess, max_q, r_max,
+                data, arities, y, pm.at[x].set(False), ess, max_q, r_max,
                 counts_impl)
 
         deltas = jax.vmap(per_parent)(cand) - base
@@ -141,6 +186,73 @@ def _sweep_matrix(data, arities, adj, ess, max_q, r_max, counts_impl, kind,
 
 
 # ---------------------------------------------------------------------------
+# Restricted matrix sweeps (the compiled ring's W-wide per-round rescoring)
+# ---------------------------------------------------------------------------
+
+def sweep_matrix_restricted_body(data, arities, adj, pid_table, ess, max_q,
+                                 r_max, counts_impl, kind, child_chunk=None,
+                                 axis_name=None, axis_size: int = 1):
+    """Traceable masked (W, n) delta matrix over a static candidate table.
+
+    ``pid_table``: (n, W) int32, row y = the candidate parents of child y
+    (the ring's E_i column, self-padded to the static width W).  Entry
+    [w, y] is the masked delta for toggling ``pid_table[y, w] -> y`` — the
+    same engine-masked values a full (n, n) sweep would put at
+    ``[pid_table[y, w], y]``, with padding slots (and any other illegal
+    toggle) at -inf.  Every backend pays W-wide column cost: the loop engine
+    builds W tables per child, the fused engines gather the W candidate data
+    columns *before* the joint contraction (insert) / build the W
+    marginalization maps only (delete).
+
+    ``axis_name``/``axis_size``: optional mesh axis over which the child
+    sweep is split (scoring-TP inside a ring process, mirroring
+    :func:`sweep_matrix_body`): each device scores n/axis_size children's
+    W-wide columns, then an all-gather reassembles the (W, n) matrix.
+    """
+    _check_kind(kind)
+    n = adj.shape[0]
+
+    def per_child(args):
+        y, pids = args
+        return sweep_column_body(data, arities, adj, y, pids, ess, max_q,
+                                 r_max, counts_impl, kind)
+
+    if counts_impl == "fused" and child_chunk is None:
+        # Same memory bound as bdeu._deltas_impl: a fused child column
+        # materializes an (m, W*r_max) one-hot — map children sequentially so
+        # one slab lives at a time.  ("fused_pallas" builds one-hots
+        # in-kernel and cannot ride lax.map on jax 0.4.x; it vmaps.)
+        child_chunk = 1
+
+    def map_children(ids, rows):
+        cnt = ids.shape[0]
+        if child_chunk is None or child_chunk >= cnt:
+            return jax.vmap(per_child)((ids, rows))              # (cnt, W)
+        return jax.lax.map(per_child, (ids, rows),
+                           batch_size=min(child_chunk, cnt))
+
+    if axis_name is not None:
+        per = -(-n // axis_size)                    # children per device
+        i = jax.lax.axis_index(axis_name)
+        ids = jnp.clip(i * per + jnp.arange(per), 0, n - 1).astype(jnp.int32)
+        cols_l = map_children(ids, jnp.take(pid_table, ids, axis=0))
+        cols = jax.lax.all_gather(cols_l, axis_name, axis=0,
+                                  tiled=True)[:n]                # (n, W)
+        return cols.T
+    children = jnp.arange(n, dtype=jnp.int32)
+    return map_children(children, pid_table).T                   # (W, n)
+
+
+@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "counts_impl",
+                                   "kind", "child_chunk"))
+def _sweep_matrix_restricted(data, arities, adj, pid_table, ess, max_q, r_max,
+                             counts_impl, kind, child_chunk):
+    return sweep_matrix_restricted_body(data, arities, adj, pid_table, ess,
+                                        max_q, r_max, counts_impl, kind,
+                                        child_chunk)
+
+
+# ---------------------------------------------------------------------------
 # The single public entry point
 # ---------------------------------------------------------------------------
 
@@ -156,6 +268,7 @@ def sweep(
     counts_impl: str = "segment",
     y: Optional[int] = None,
     pids: Optional[Array] = None,
+    pid_table: Optional[Array] = None,
     child_chunk: Optional[int] = None,
 ) -> Array:
     """Masked BDeu delta sweep — the one API behind GES, the ring, and cGES.
@@ -166,17 +279,43 @@ def sweep(
     * ``pids=None`` — all n candidates; ``pids=<(W,) int32>`` — the
       restricted subset (ring E_i), returning a (W,) column whose cost
       scales with W under every backend.
+    * ``pid_table=<(n, W) int32>`` (matrix sweeps only) — per-child
+      restricted candidates, returning the masked (W, n) delta matrix whose
+      entry [w, y] toggles ``pid_table[y, w] -> y``; the compiled ring's
+      W-wide per-round rescoring.
+
+    Candidate ids are validated up front: a ``pids``/``pid_table`` whose
+    width exceeds n or that contains ids outside [0, n) raises ValueError
+    instead of silently gathering wrong shapes.
 
     Dispatches to the loop / fused-jnp / fused-Pallas backend named by
     ``counts_impl``; all backends return identical masked columns (see the
     module docstring for the -inf convention at illegal toggles).
     """
     _check_kind(kind)
+    bdeu.check_counts_impl(counts_impl)
+    n = adj.shape[0]
+    if pid_table is not None:
+        if y is not None or pids is not None:
+            raise ValueError("pid_table is a whole-matrix restriction — "
+                             "pass either pid_table or (y, pids), not both")
+        pid_table = _check_pids(pid_table, n, name="pid_table")
+        if pid_table.ndim != 2 or pid_table.shape[0] != n:
+            raise ValueError(f"pid_table must be (n, W) = ({n}, W), got "
+                             f"{pid_table.shape}")
+        return _sweep_matrix_restricted(data, arities, adj, pid_table, ess,
+                                        max_q, r_max, counts_impl, kind,
+                                        child_chunk)
     if y is None:
         if pids is not None:
             raise ValueError("pids restriction requires a column sweep "
-                             "(pass y)")
+                             "(pass y) — for a restricted matrix pass "
+                             "pid_table")
         return _sweep_matrix(data, arities, adj, ess, max_q, r_max,
                              counts_impl, kind, child_chunk)
+    if pids is not None:
+        pids = _check_pids(pids, n, name="pids")
+        if pids.ndim != 1:
+            raise ValueError(f"pids must be 1-D (W,), got {pids.shape}")
     return _sweep_column(data, arities, adj, jnp.int32(y), pids, ess, max_q,
                          r_max, counts_impl, kind)

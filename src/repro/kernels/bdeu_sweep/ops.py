@@ -81,6 +81,11 @@ def sweep_counts_restricted(
     pays a W-wide contraction, tracking the partition exactly like the loop
     engine's W per-candidate table builds.  The column tile is shrunk to the
     (padded) W so a narrow restriction does not pay a full default tile.
+
+    This is the contraction behind BOTH restricted paths: the host-engine
+    driver's per-column ``pids`` sweeps and the compiled ges_jit/shard_map
+    ring, whose (n, W) pid_table matrix sweeps call it once per child from
+    inside the while_loop (core/sweeps.sweep_matrix_restricted_body).
     """
     data_w = jnp.take(data, pids, axis=1)
     w = data_w.shape[1]

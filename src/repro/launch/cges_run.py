@@ -3,7 +3,15 @@
     PYTHONPATH=src python -m repro.launch.cges_run \
         --family link_like --scale 0.05 --k 4 --limit --ckpt-dir /tmp/cges
 
-Fault tolerance (1000-node posture, per DESIGN.md):
+Engines:
+* ``--engine host`` (default): the checkpointable host round loop below —
+  ring processes are host tasks with jit-batched W-wide column sweeps.
+* ``--engine ring``: the fully-compiled shard_map ring (core/ring.ring_cges)
+  on a k-device mesh (host platform devices are forced to k when needed),
+  with per-process static (n, W) pid_tables so every compiled round pays
+  W = |E_i|-wide sweeps; the unrestricted fine-tune still runs on host.
+
+Fault tolerance (1000-node posture, per DESIGN.md; host engine only):
 * round-atomic checkpointing of the full ring state (k graphs + best score):
   a killed run resumes at the last completed round with identical results
   (the ring is deterministic given the partition);
@@ -17,6 +25,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -113,11 +122,37 @@ def main():
                          "this host-engine driver both are restricted to "
                          "each process's E_i candidates (pids) before they "
                          "run")
+    ap.add_argument("--engine", default="host", choices=["host", "ring"],
+                    help="host: checkpointable host round loop; ring: the "
+                         "fully-compiled shard_map ring with per-process "
+                         "(n, W) pid_tables — compiled per-round sweep cost "
+                         "tracks W = |E_i|, not n")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-round", type=int, default=None)
     ap.add_argument("--fail-member", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.engine == "ring" and (args.ckpt_dir or args.fail_at_round
+                                  is not None):
+        ap.error("--ckpt-dir / --fail-at-round are host-engine features")
+    if args.engine == "ring":
+        # The compiled ring needs k devices on its mesh axis.  XLA_FLAGS
+        # must be set before the backend initializes, which importing
+        # repro.core already did — so on a too-small platform we re-exec
+        # this driver once with forced host devices.
+        import jax
+
+        if len(jax.devices()) < args.k:
+            flags = os.environ.get("XLA_FLAGS", "")
+            if "host_platform_device_count" in flags:
+                raise SystemExit(
+                    f"--engine ring needs >= k={args.k} devices, found "
+                    f"{len(jax.devices())}")
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={args.k}"
+            ).strip()
+            os.execv(sys.executable, [sys.executable, "-m",
+                                      "repro.launch.cges_run"] + sys.argv[1:])
 
     t0 = time.time()
     bn = benchmark_bn(args.family, scale=args.scale, seed=args.seed)
@@ -130,10 +165,32 @@ def main():
     lim = edge_add_limit(n, args.k) if args.limit else None
     cache = ScoreCache()
 
-    adj, score, rounds, masks = ring_rounds(
-        data, bn.arities, masks, config, lim, args.max_rounds,
-        ckpt_dir=args.ckpt_dir, fail_at_round=args.fail_at_round,
-        fail_member=args.fail_member, cache=cache)
+    ring_w = None
+    if args.engine == "ring":
+        import jax
+        from jax.sharding import Mesh
+        from ..core.ring import RingSpec, ring_cges
+
+        devs = jax.devices()
+        if len(devs) < args.k:
+            raise SystemExit(
+                f"--engine ring needs >= k={args.k} devices, found "
+                f"{len(devs)} (XLA_FLAGS already initialized?)")
+        pid_tables = partition.pid_tables(masks)
+        ring_w = int(pid_tables.shape[2])
+        mesh = Mesh(np.array(devs[:args.k]), ("ring",))
+        spec = RingSpec(k=args.k, max_rounds=args.max_rounds)
+        graphs, scores, rounds = ring_cges(
+            data, bn.arities, masks, mesh, spec, config,
+            add_limit=lim, pid_tables=pid_tables)
+        adj = graphs[int(np.argmax(scores))]
+        print(f"compiled ring: {rounds} rounds, W={ring_w} "
+              f"(restricted sweep width vs n={n})")
+    else:
+        adj, score, rounds, masks = ring_rounds(
+            data, bn.arities, masks, config, lim, args.max_rounds,
+            ckpt_dir=args.ckpt_dir, fail_at_round=args.fail_at_round,
+            fail_member=args.fail_member, cache=cache)
 
     # fine-tuning pass (unrestricted GES) — carries GES's guarantees
     res = ges_host(data, bn.arities, init_adj=adj, allowed=None,
@@ -141,12 +198,15 @@ def main():
     wall = time.time() - t0
     out = {
         "family": args.family, "n": n, "m": args.m, "k": args.k,
+        "engine": args.engine,
         "limit": bool(args.limit), "rounds": rounds,
         "bdeu_per_instance": res.score / args.m,
         "smhd_vs_truth": smhd_np(res.adj, bn.adj),
         "wall_s": round(wall, 2),
         "cache_hits": cache.hits, "cache_misses": cache.misses,
     }
+    if ring_w is not None:
+        out["ring_W"] = ring_w
     print(json.dumps(out, indent=2))
     if args.out:
         with open(args.out, "a") as f:

@@ -212,16 +212,24 @@ def run_ring_cell(domain: str, mesh_kind: str,
     spec = RingSpec(k=k, axis=ring_axis, max_rounds=16,
                     axis_model="model", axis_model_size=16)
     prog = build_ring_program(mesh, spec, cfg, r_max,
-                              edge_add_limit(n, k))
+                              edge_add_limit(n, k), restricted=True)
+
+    # Static E_i width for a balanced k-partition: ~n/k within-cluster
+    # candidates per column plus ~n/k balanced cross edges (see
+    # partition.pid_tables); the compiled ring's per-round sweep cost
+    # tracks this W, not n.
+    ring_w = max(1, min(n, -(-2 * n // k)))
+    rec["ring_W"] = ring_w
 
     data = sp.sds((m, n), jnp.int32)
     arities = sp.sds((n,), jnp.int32)
     masks = sp.sds((k, n, n), jnp.int8)
     graphs0 = sp.sds((k, n, n), jnp.int8)
+    pid_tables = sp.sds((k, n, ring_w), jnp.int32)
 
     t0 = time.time()
     with mesh:
-        lowered = prog.lower(data, arities, masks, graphs0)
+        lowered = prog.lower(data, arities, masks, graphs0, pid_tables)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()

@@ -57,6 +57,38 @@ def test_ges_jit_matches_host(case):
     assert np.isclose(float(score_j), res_h.score, rtol=1e-5, atol=0.5)
 
 
+@pytest.mark.parametrize("impl", ["segment", "fused", "fused_pallas"])
+def test_ges_jit_pid_table_trajectory_identity(case, impl):
+    """The compiled W-wide program (pid_table threaded through the
+    while_loop) takes the IDENTICAL greedy trajectory as the old
+    full-n-masked compiled path and the host driver, on a restricted
+    allowed mask — under every backend."""
+    from repro.core import pid_table_from_allowed
+
+    bn, data = case
+    n = bn.n
+    rng = np.random.default_rng(5)
+    allowed = rng.random((n, n)) < 0.5
+    np.fill_diagonal(allowed, False)
+    allowed[:, 3] = False                  # empty E_i column (all self-pads)
+    tbl = jnp.asarray(pid_table_from_allowed(allowed))
+    assert tbl.shape[1] < n                # genuinely restricted (W < n)
+    cfg = GESConfig(max_q=256, counts_impl=impl)
+    dj = jnp.asarray(data.astype(np.int32))
+    aj = jnp.asarray(bn.arities.astype(np.int32))
+    zeros = jnp.zeros((n, n), jnp.int8)
+    mask_j = jnp.asarray(allowed.astype(np.int8))
+    adj_f, score_f, _, _ = ges_jit(dj, aj, zeros, mask_j, config=cfg)
+    adj_w, score_w, _, _ = ges_jit(dj, aj, zeros, mask_j, config=cfg,
+                                   pid_table=tbl)
+    assert np.array_equal(np.asarray(adj_f), np.asarray(adj_w))
+    assert np.isclose(float(score_f), float(score_w), rtol=1e-6)
+    res_h = ges_host(data, bn.arities, allowed=allowed, config=cfg)
+    assert np.array_equal(res_h.adj, np.asarray(adj_w))
+    # the restriction is honoured: no edge outside the allowed mask
+    assert np.all(allowed | ~np.asarray(adj_w).astype(bool))
+
+
 def test_ges_recovers_chain():
     """0->1->2 with strong CPTs: GES must recover the Markov equivalence class."""
     rng = np.random.default_rng(0)

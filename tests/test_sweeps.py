@@ -206,6 +206,140 @@ def test_sweep_matrix_rejects_pids():
               ess=10.0, max_q=8, r_max=2)
 
 
+def test_sweep_rejects_bad_candidate_ids():
+    """Over-long or out-of-range pids/pid_table raise a clear ValueError
+    instead of flowing into the gather as silent wrong shapes."""
+    n = 5
+    data = np.zeros((8, n), dtype=np.int64)
+    ar = np.full(n, 2)
+    dj, aj = _jnp(data, ar)
+    adj = jnp.zeros((n, n), jnp.int8)
+    kw = dict(ess=10.0, max_q=8, r_max=2)
+    with pytest.raises(ValueError, match="candidates per column"):
+        sweep(dj, aj, adj, kind="insert", y=0,
+              pids=jnp.zeros(n + 1, jnp.int32), **kw)
+    with pytest.raises(ValueError, match="out-of-range"):
+        sweep(dj, aj, adj, kind="insert", y=0,
+              pids=jnp.asarray([0, n], dtype=jnp.int32), **kw)
+    with pytest.raises(ValueError, match="out-of-range"):
+        sweep(dj, aj, adj, kind="insert", y=0,
+              pids=jnp.asarray([-1, 1], dtype=jnp.int32), **kw)
+    with pytest.raises(ValueError, match="integer"):
+        sweep(dj, aj, adj, kind="insert", y=0,
+              pids=jnp.asarray([0.0, 1.0]), **kw)
+    with pytest.raises(ValueError, match="candidates per column"):
+        sweep(dj, aj, adj, kind="insert",
+              pid_table=jnp.zeros((n, n + 2), jnp.int32), **kw)
+    with pytest.raises(ValueError, match="out-of-range"):
+        sweep(dj, aj, adj, kind="insert",
+              pid_table=jnp.full((n, 2), n, dtype=jnp.int32), **kw)
+    with pytest.raises(ValueError, match=r"\(n, W\)"):
+        sweep(dj, aj, adj, kind="insert",
+              pid_table=jnp.zeros((n - 1, 2), jnp.int32), **kw)
+    with pytest.raises(ValueError, match="not both"):
+        sweep(dj, aj, adj, kind="insert", y=0,
+              pid_table=jnp.zeros((n, 2), jnp.int32), **kw)
+
+
+def test_unknown_counts_impl_fails_loudly():
+    """A typo'd backend (config or REPRO_COUNTS_IMPL) must raise, not
+    silently fall through the dispatch chains to 'segment'."""
+    from repro.core import GESConfig
+
+    with pytest.raises(ValueError, match="unknown counts_impl"):
+        GESConfig(counts_impl="fuesd")
+    data = np.zeros((4, 3), dtype=np.int64)
+    ar = np.full(3, 2)
+    dj, aj = _jnp(data, ar)
+    with pytest.raises(ValueError, match="unknown counts_impl"):
+        sweep(dj, aj, jnp.zeros((3, 3), jnp.int8), kind="insert",
+              counts_impl="Fused", ess=10.0, max_q=8, r_max=2)
+
+
+# ---------------------------------------------------------------------------
+# Restricted (W, n) matrix sweeps (the compiled ring's per-round rescoring)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["insert", "delete"])
+@pytest.mark.parametrize("impl", ["segment"] + FUSED_IMPLS)
+def test_restricted_matrix_matches_full(mixed_case, kind, impl):
+    """sweep(pid_table=...) returns the (W, n) matrix whose entry [w, y]
+    equals the full (n, n) loop matrix at [pid_table[y, w], y], with
+    self-pads -inf — under every backend."""
+    from repro.core.partition import pid_table_from_allowed
+
+    data, arities = mixed_case
+    n = arities.size
+    rng = np.random.default_rng(7)
+    adj = np.zeros((n, n), dtype=np.int8)
+    adj[[1, 4], 0] = 1
+    adj[[0, 2, 6], 5] = 1
+    allowed = rng.random((n, n)) < 0.4
+    allowed[:, 8] = False                 # empty E_i column: all self-pads
+    np.fill_diagonal(allowed, False)
+    tbl = pid_table_from_allowed(allowed)
+    W = tbl.shape[1]
+    dj, aj = _jnp(data, arities)
+    kw = dict(kind=kind, ess=10.0, max_q=256, r_max=int(arities.max()))
+    D_full = np.asarray(sweep(dj, aj, jnp.asarray(adj),
+                              counts_impl="segment", **kw))
+    D_res = np.asarray(sweep(dj, aj, jnp.asarray(adj), counts_impl=impl,
+                             pid_table=jnp.asarray(tbl), **kw))
+    assert D_res.shape == (W, n)
+    assert np.all(np.isneginf(D_res[:, 8]))
+    for y in range(n):
+        for w in range(W):
+            x = tbl[y, w]
+            if x == y:
+                assert np.isneginf(D_res[w, y])
+            elif np.isfinite(D_full[x, y]):
+                assert np.isclose(D_res[w, y], D_full[x, y],
+                                  rtol=1e-4, atol=2e-3), (y, w)
+            else:
+                assert np.isneginf(D_res[w, y]) == np.isneginf(D_full[x, y])
+
+
+@pytest.mark.parametrize("kind", ["insert", "delete"])
+@pytest.mark.parametrize("impl", ["segment", "fused"])
+def test_restricted_matrix_bitwise_equals_full(mixed_case, kind, impl):
+    """Restricted entries are BITWISE equal to the full-n matrix (same
+    engine): the compiled ring's full-n tie-breaking argmax
+    (ges._masked_argmax_mapped) relies on exact value equality between the
+    (W, n) and (n, n) programs — 1-ulp drift would let score-equivalent
+    ties (x->y vs y->x) resolve differently."""
+    from repro.core.partition import pid_table_from_allowed
+
+    data, arities = mixed_case
+    n = arities.size
+    rng = np.random.default_rng(13)
+    allowed = rng.random((n, n)) < 0.5
+    np.fill_diagonal(allowed, False)
+    # parents drawn inside `allowed` so delete entries are plentiful
+    adj = np.zeros((n, n), dtype=np.int8)
+    for y in range(n):
+        cand = np.flatnonzero(allowed[:, y])
+        for x in cand[:2]:
+            adj[x, y] = 1
+    tbl = pid_table_from_allowed(allowed)
+    dj, aj = _jnp(data, arities)
+    kw = dict(kind=kind, ess=10.0, max_q=256, r_max=int(arities.max()))
+    D_full = np.asarray(sweep(dj, aj, jnp.asarray(adj), counts_impl=impl,
+                              **kw))
+    D_res = np.asarray(sweep(dj, aj, jnp.asarray(adj), counts_impl=impl,
+                             pid_table=jnp.asarray(tbl), **kw))
+    checked = 0
+    for y in range(n):
+        for w in range(tbl.shape[1]):
+            x = tbl[y, w]
+            if x == y:
+                continue
+            a, b = D_res[w, y], D_full[x, y]
+            if np.isfinite(b) or np.isfinite(a):
+                assert a == b, (y, w, x, a, b)    # bitwise, not isclose
+                checked += 1
+    assert checked > 10
+
+
 # ---------------------------------------------------------------------------
 # End-to-end trajectory invariance
 # ---------------------------------------------------------------------------
@@ -236,9 +370,11 @@ def test_ges_host_bes_trajectory_identity(mixed_case):
 
 
 def test_ring_cges_trajectory_invariance():
-    """The full shard_map ring (k=2 devices, FES+BES per process per round)
-    returns IDENTICAL adjacencies under counts_impl='fused' and 'segment'
-    (subprocess: needs a multi-device host platform)."""
+    """The compiled W-wide ring (pid_table threaded through the shard_map
+    while_loop) is trajectory-identical to (a) the old full-n-masked
+    compiled path, (b) every other counts_impl backend, and (c) the
+    host-engine cGES driver (ges_host + fusion_edge_union round loop), on
+    k in {1, 2} meshes (subprocess: needs a multi-device host platform)."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -247,26 +383,69 @@ def test_ring_cges_trajectory_invariance():
         sys.path.insert(0, "src")
         import numpy as np, jax
         from jax.sharding import Mesh
-        from repro.core import GESConfig, partition
+        from repro.core import GESConfig, fusion, ges_host, partition
         from repro.core.ring import RingSpec, ring_cges
         from repro.data.bn import forward_sample, random_bn
 
         rng = np.random.default_rng(2)
         bn = random_bn(rng, n=8, n_edges=9, max_parents=2)
         data = forward_sample(bn, 400, rng)
-        masks = partition.partition_edges(data, bn.arities, 2)
-        mesh = Mesh(np.array(jax.devices()[:2]), ("ring",))
-        spec = RingSpec(k=2, max_rounds=3)
-        out = {}
-        for impl in ("segment", "fused"):
-            cfg = GESConfig(max_q=64, counts_impl=impl)
-            graphs, scores, rounds = ring_cges(
-                data, bn.arities, masks, mesh, spec, cfg)
-            out[impl] = (graphs, scores)
-        assert np.array_equal(out["segment"][0], out["fused"][0]), \\
-            (out["segment"][0], out["fused"][0])
-        assert np.allclose(out["segment"][1], out["fused"][1], rtol=1e-6)
-        assert out["segment"][0].any()     # the ring actually learned edges
+        n = bn.n
+        MAX_ROUNDS = 3
+
+        def host_ring(masks, k, cfg):
+            '''Host-engine mirror of _ring_body: ges_host processes, the
+            same one-hop fusion and convergence rule, keeping the graphs
+            of the last globally-improving round (Algorithm 1 best BNs).'''
+            graphs = [np.zeros((n, n), np.int8) for _ in range(k)]
+            best_g, best_s = list(graphs), [-np.inf] * k
+            best, go, rnd = -np.inf, True, 0
+            while go and rnd < MAX_ROUNDS:
+                preds = [graphs[(i - 1) % k] for i in range(k)]
+                new_g, new_s = [], []
+                for i in range(k):
+                    init = fusion.fusion_edge_union(
+                        graphs[i], preds[i]).astype(np.int8)
+                    res = ges_host(data, bn.arities, init_adj=init,
+                                   allowed=masks[i], config=cfg)
+                    new_g.append(res.adj); new_s.append(res.score)
+                graphs, rnd = new_g, rnd + 1
+                round_best = max(new_s)
+                go = round_best > best + cfg.tol
+                if go:
+                    best_g, best_s = new_g, new_s
+                best = max(best, round_best)
+            return np.stack(best_g), np.array(best_s), rnd
+
+        for k in (1, 2):
+            masks = partition.partition_edges(data, bn.arities, k)
+            mesh = Mesh(np.array(jax.devices()[:k]), ("ring",))
+            spec = RingSpec(k=k, max_rounds=MAX_ROUNDS)
+            impls = (("segment", "fused", "fused_pallas") if k == 2
+                     else ("segment", "fused"))
+            out = {}
+            for impl in impls:
+                cfg = GESConfig(max_q=64, counts_impl=impl)
+                gW, sW, rW = ring_cges(data, bn.arities, masks, mesh,
+                                       spec, cfg, restricted=True)
+                gF, sF, rF = ring_cges(data, bn.arities, masks, mesh,
+                                       spec, cfg, restricted=False)
+                assert np.array_equal(gW, gF), (k, impl, "W vs full-n")
+                assert np.allclose(sW, sF, rtol=1e-6), (k, impl)
+                assert rW == rF, (k, impl)
+                out[impl] = (gW, sW)
+            for impl in impls[1:]:
+                assert np.array_equal(out[impls[0]][0], out[impl][0]), \\
+                    (k, impl, "impl mismatch")
+                assert np.allclose(out[impls[0]][1], out[impl][1],
+                                   rtol=1e-6)
+            gH, sH, rH = host_ring(masks, k,
+                                   GESConfig(max_q=64,
+                                             counts_impl="segment"))
+            assert np.array_equal(out["segment"][0], gH), (k, "vs host")
+            assert np.allclose(out["segment"][1], sH,
+                               rtol=1e-5, atol=1e-2), (k, "host scores")
+            assert out["segment"][0].any()   # the ring actually learned
         print("RING_OK")
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,

@@ -1,0 +1,153 @@
+"""Property-style tests for the unified sweep engine (via the deterministic
+hypothesis shim in _hypothesis_compat): randomized arities, graphs and pid
+subsets — including W > degree self-padding and empty E_i columns — must
+yield entry-for-entry identical masked insert/delete columns and (W, n)
+matrices under every backend, and identical to the host BDeu oracle."""
+import numpy as np
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.core import bdeu
+from repro.core.partition import pid_table_from_allowed
+from repro.core.sweeps import sweep
+
+IMPLS = ("segment", "fused", "fused_pallas")
+
+
+def _random_case(seed):
+    """Random mixed-arity data + random DAG + random allowed mask."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 9))
+    m = int(rng.integers(60, 200))
+    arities = rng.integers(2, 5, size=n)
+    data = np.stack([rng.integers(0, a, size=m) for a in arities], 1)
+    # random DAG: edges only from lower to higher position in a random order
+    order = rng.permutation(n)
+    adj = np.zeros((n, n), dtype=np.int8)
+    for j in range(1, n):
+        y = order[j]
+        k = int(rng.integers(0, min(3, j) + 1))
+        for x in rng.choice(order[:j], size=k, replace=False):
+            adj[x, y] = 1
+    allowed = rng.random((n, n)) < rng.uniform(0.2, 0.8)
+    np.fill_diagonal(allowed, False)
+    if n > 4:
+        allowed[:, int(rng.integers(0, n))] = False    # empty E_i column
+    return rng, n, arities, data, adj, allowed
+
+
+def _jnp(data, arities):
+    return (jnp.asarray(data.astype(np.int32)),
+            jnp.asarray(arities.astype(np.int32)))
+
+
+def _agree(a, b, ctx):
+    assert a.shape == b.shape, ctx
+    assert np.array_equal(np.isneginf(a), np.isneginf(b)), ctx
+    assert np.array_equal(np.isposinf(a), np.isposinf(b)), ctx
+    assert np.array_equal(np.isnan(a), np.isnan(b)), ctx
+    f = np.isfinite(a)
+    assert np.allclose(a[f], b[f], rtol=1e-4, atol=2e-3), ctx
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=6, deadline=None)
+def test_property_restricted_columns_agree(seed):
+    """Random pid subsets (self-pads included): every backend returns the
+    same masked (W,) insert/delete column, matching the host oracle."""
+    rng, n, arities, data, adj, _ = _random_case(seed)
+    dj, aj = _jnp(data, arities)
+    y = int(rng.integers(0, n))
+    W = int(rng.integers(1, n + 1))
+    n_real = int(rng.integers(0, W)) if W > 1 else 0
+    real = rng.choice(n, size=n_real, replace=False)
+    pids = np.full(W, y, dtype=np.int32)           # W > degree: self-padded
+    pids[:real.size] = real
+    kw = dict(y=y, pids=jnp.asarray(pids), ess=10.0, max_q=256,
+              r_max=int(arities.max()))
+    pm = adj[:, y].astype(bool)
+    base = bdeu.local_score_np(data, arities, y, list(np.flatnonzero(pm)))
+    for kind in ("insert", "delete"):
+        cols = {impl: np.asarray(sweep(dj, aj, jnp.asarray(adj), kind=kind,
+                                       counts_impl=impl, **kw))
+                for impl in IMPLS}
+        for impl in IMPLS[1:]:
+            _agree(cols["segment"], cols[impl], (seed, kind, impl))
+        # host-oracle check at every legal entry
+        for w, x in enumerate(pids):
+            legal = (x != y) and (not pm[x] if kind == "insert" else pm[x])
+            if not legal:
+                assert np.isneginf(cols["segment"][w]), (seed, kind, w)
+                continue
+            new_pa = (list(np.flatnonzero(pm)) + [x] if kind == "insert"
+                      else [p for p in np.flatnonzero(pm) if p != x])
+            q = int(np.prod(arities[new_pa])) if new_pa else 1
+            if q > 256:
+                continue                            # max_q-guarded entry
+            want = bdeu.local_score_np(data, arities, y, new_pa) - base
+            assert np.isclose(cols["segment"][w], want,
+                              rtol=1e-4, atol=2e-3), (seed, kind, w)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=5, deadline=None)
+def test_property_restricted_matrices_agree(seed):
+    """Random allowed masks (empty columns included) and W >= max degree:
+    every backend returns the same masked (W, n) matrix, equal to the full
+    (n, n) loop matrix gathered through the pid table."""
+    rng, n, arities, data, adj, allowed = _random_case(seed)
+    dj, aj = _jnp(data, arities)
+    # sometimes force extra self-padding (W wider than any column occupancy)
+    extra = int(rng.integers(0, 3))
+    occ = max(1, int(allowed.sum(axis=0).max()))
+    tbl = pid_table_from_allowed(allowed, width=min(n, occ + extra))
+    W = tbl.shape[1]
+    kw = dict(ess=10.0, max_q=256, r_max=int(arities.max()))
+    for kind in ("insert", "delete"):
+        D_full = np.asarray(sweep(dj, aj, jnp.asarray(adj), kind=kind,
+                                  counts_impl="segment", **kw))
+        mats = {impl: np.asarray(sweep(dj, aj, jnp.asarray(adj), kind=kind,
+                                       counts_impl=impl,
+                                       pid_table=jnp.asarray(tbl), **kw))
+                for impl in IMPLS}
+        for impl in IMPLS[1:]:
+            _agree(mats["segment"], mats[impl], (seed, kind, impl))
+        got = mats["segment"]
+        assert got.shape == (W, n)
+        for y in range(n):
+            for w in range(W):
+                x = tbl[y, w]
+                if x == y:
+                    assert np.isneginf(got[w, y]), (seed, kind, y, w)
+                else:
+                    a, b = got[w, y], D_full[x, y]
+                    if np.isfinite(b):
+                        assert np.isclose(a, b, rtol=1e-4, atol=2e-3), \
+                            (seed, kind, y, w)
+                    else:
+                        assert np.isneginf(a) == np.isneginf(b) and \
+                            np.isposinf(a) == np.isposinf(b), \
+                            (seed, kind, y, w)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=4, deadline=None)
+def test_property_pid_table_ges_jit_trajectory(seed):
+    """Random restricted masks: the compiled W-wide ges_jit program takes
+    the identical greedy trajectory as the full-n-masked program and the
+    host driver."""
+    from repro.core import GESConfig, ges_host, ges_jit
+
+    rng, n, arities, data, _, allowed = _random_case(seed)
+    dj, aj = _jnp(data, arities)
+    tbl = jnp.asarray(pid_table_from_allowed(allowed))
+    cfg = GESConfig(max_q=64, counts_impl="fused")
+    zeros = jnp.zeros((n, n), jnp.int8)
+    mask_j = jnp.asarray(allowed.astype(np.int8))
+    a_full, s_full, *_ = ges_jit(dj, aj, zeros, mask_j, config=cfg)
+    a_res, s_res, *_ = ges_jit(dj, aj, zeros, mask_j, config=cfg,
+                               pid_table=tbl)
+    assert np.array_equal(np.asarray(a_full), np.asarray(a_res)), seed
+    assert np.isclose(float(s_full), float(s_res), rtol=1e-6), seed
+    res_h = ges_host(data, arities, allowed=allowed, config=cfg)
+    assert np.array_equal(res_h.adj, np.asarray(a_res)), seed
