@@ -13,6 +13,13 @@ compiled-ring per-round matrix (``ring_compiled``: the (W, n) pid_table
 sweep the ges_jit/shard_map ring initializes each round from, vs the old
 full-n matrix) — and writes a machine-readable trajectory record; later PRs
 diff this file to track the sweep's perf over time.
+
+The record also carries a ``fusion`` entry: the OTHER per-round ring
+operator — the sigma-consistent edge union (core/fusion.py) — timed host vs
+jit at the same n, against the pre-refactor traceable baseline that
+recomputed the full longest-path depth per covered reversal (kept inline
+below as ``_legacy_fuse_jit``), plus the fusion/sweep per-round cost ratio
+that decides whether compiled ring rounds are sweep-bound or fusion-bound.
 """
 from __future__ import annotations
 
@@ -83,6 +90,113 @@ def bench_all():
                    x, a, b, c)
         rows.append((f"ssd_scan/{impl}", us, "B1 H4 T1k P64 N64"))
     return rows
+
+
+def _legacy_fuse_jit(g_own, g_pred):
+    """Pre-refactor traceable fusion (PR 3 state), kept ONLY as the benchmark
+    baseline for ``fusion.speedup_jit_vs_prerefactor``: GHO cost re-summed
+    from both (n, n) masks at every position, and a full longest-path depth
+    recompute — an O(n)-step fori_loop over the whole matrix — inside every
+    covered-edge reversal.  core/fusion.py's engines replaced both with
+    incremental maintenance."""
+    n = g_own.shape[0]
+
+    def depth_full(adj, in_s):
+        sub = adj.astype(bool) & in_s[:, None] & in_s[None, :]
+
+        def body(_, depth):
+            parent_d = jnp.where(sub, depth[:, None], -1)
+            return jnp.where(in_s,
+                             jnp.maximum(depth, parent_d.max(axis=0) + 1), -1)
+
+        return jax.lax.fori_loop(0, n, body, jnp.where(in_s, 0, -1))
+
+    def gho(adj_a, adj_b):
+        a, b = adj_a.astype(jnp.int32), adj_b.astype(jnp.int32)
+
+        def body(step, carry):
+            rank, remaining = carry
+            rem = remaining.astype(jnp.int32)
+            cost = (a * rem[None, :]).sum(1) + (b * rem[None, :]).sum(1)
+            cost = jnp.where(remaining, cost, jnp.iinfo(jnp.int32).max)
+            v = jnp.argmin(cost)
+            return rank.at[v].set(n - 1 - step), remaining.at[v].set(False)
+
+        rank, _ = jax.lax.fori_loop(
+            0, n, body, (jnp.zeros(n, jnp.int32), jnp.ones(n, bool)))
+        return rank
+
+    def sigma(adj, rank):
+        order = jnp.argsort(-rank)
+
+        def process_node(step, adj):
+            v = order[step]
+            in_s = rank <= rank[v]
+
+            def cond(adj):
+                return (jnp.take(adj, v, axis=0).astype(bool) & in_s).any()
+
+            def body(adj):
+                out = jnp.take(adj, v, axis=0).astype(bool) & in_s
+                depth = depth_full(adj, in_s)
+                w = jnp.argmin(jnp.where(out, depth,
+                                         jnp.iinfo(jnp.int32).max))
+                pa_v = jnp.take(adj, v, axis=1).astype(bool)
+                pa_w = jnp.take(adj, w, axis=1).astype(bool)
+                idx = jnp.arange(n)
+                add_to_w = pa_v & ~pa_w & (idx != w) & (idx != v)
+                add_to_v = pa_w & ~pa_v & (idx != v) & (idx != w)
+                adj = adj.at[:, w].set((pa_w | add_to_w).astype(adj.dtype))
+                pa_v2 = jnp.take(adj, v, axis=1).astype(bool)
+                adj = adj.at[:, v].set((pa_v2 | add_to_v).astype(adj.dtype))
+                return adj.at[v, w].set(0).at[w, v].set(1)
+
+            return jax.lax.while_loop(cond, body, adj)
+
+        return jax.lax.fori_loop(0, n, process_node, adj)
+
+    rank = gho(g_own, g_pred)
+    ta = sigma(g_own.astype(jnp.int8), rank)
+    tb = sigma(g_pred.astype(jnp.int8), rank)
+    return (ta.astype(bool) | tb.astype(bool)).astype(jnp.int8)
+
+
+def bench_fusion(n: int = 400, seed: int = 0, reps: int = 3,
+                 legacy: bool = True) -> dict:
+    """Per-round ring fusion (sigma-consistent edge union) at paper scale.
+
+    Times the unified engine (core/fusion.py) host vs jit on a sparse random
+    DAG pair, and — when ``legacy`` — the pre-refactor traceable baseline
+    (full depth recompute per reversal) for the recorded speedup.
+    """
+    from repro.core import fusion
+    from repro.core.dag import random_dag_np
+
+    rng = np.random.default_rng(seed)
+    a = random_dag_np(rng, n, int(1.2 * n), max_parents=3)
+    b = random_dag_np(rng, n, int(1.2 * n), max_parents=3)
+    a8 = jnp.asarray(a.astype(np.int8))
+    b8 = jnp.asarray(b.astype(np.int8))
+
+    host_us = _time(lambda x, y: fusion.fusion_edge_union(x, y,
+                                                          engine="host"),
+                    a, b, reps=reps)
+    jit_us = _time(jax.jit(fusion.fuse_trace), a8, b8, reps=reps)
+    rec = {"n": n,
+           "edges": {"a": int(a.sum()), "b": int(b.sum())},
+           "host_us": round(host_us, 1),
+           "jit_us": round(jit_us, 1)}
+    if legacy:
+        # The baseline is minutes-scale at n=400 — time it by hand with ONE
+        # warmup + ONE rep (_time's warmup would execute it twice more).
+        fn = jax.jit(_legacy_fuse_jit)
+        jax.block_until_ready(fn(a8, b8))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a8, b8))
+        legacy_us = (time.perf_counter() - t0) * 1e6
+        rec["legacy_jit_us"] = round(legacy_us, 1)
+        rec["speedup_jit_vs_prerefactor"] = round(legacy_us / jit_us, 2)
+    return rec
 
 
 def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
@@ -203,6 +317,15 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
         "restricted_round_us": round(res_us, 1),
         "w_cost_fraction_of_full_n": round(res_us / full_us, 3),
     }
+
+    # Fusion — the other per-round ring operator: host vs jit through the
+    # unified core/fusion.py engine, the pre-refactor full-depth-recompute
+    # baseline, and the fusion/sweep cost ratio of one compiled ring round
+    # (one pairwise edge union + one (W, n) restricted sweep init).
+    rec["fusion"] = bench_fusion(n=n, seed=seed, reps=reps)
+    rec["fusion"]["fusion_over_sweep_round"] = round(
+        rec["fusion"]["jit_us"]
+        / rec["ring_compiled"]["restricted_round_us"], 3)
     return rec
 
 
@@ -241,6 +364,12 @@ def main():
         print(f"bdeu_sweep/ring_compiled,{r['restricted_round_us']:.0f},"
               f"(W,n) pid_table round W={r['W']} "
               f"cost={r['w_cost_fraction_of_full_n']} of full-n round")
+        fu = rec["fusion"]
+        print(f"fusion/jit,{fu['jit_us']:.0f},"
+              f"host={fu['host_us']:.0f}us "
+              f"prerefactor={fu.get('legacy_jit_us', 0):.0f}us "
+              f"speedup={fu.get('speedup_jit_vs_prerefactor', 0)}x "
+              f"fusion/sweep_round={fu['fusion_over_sweep_round']}")
 
 
 if __name__ == "__main__":

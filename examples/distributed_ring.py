@@ -14,7 +14,7 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax
 
-from repro.core import GESConfig, ges_host, partition
+from repro.core import GESConfig, fusion, ges_host, partition
 from repro.core.cges import edge_add_limit
 from repro.core.dag import is_dag_np, smhd_np
 from repro.core.ring import RingSpec, ring_cges
@@ -41,6 +41,15 @@ graphs, scores, rounds = ring_cges(
 best = int(np.argmax(scores))
 print(f"ring converged in {rounds} rounds; "
       f"per-process BDeu: {[round(float(s), 1) for s in scores]}")
+
+# The merge the compiled ring traced each round is the SAME unified layer
+# (core/fusion.py) callable from the host: fuse the k per-process winners
+# into one sigma-consistent edge union — host and jit engines agree
+# adjacency-for-adjacency.
+consensus = fusion.fuse(list(graphs), engine="host")
+assert np.array_equal(consensus, fusion.fuse(list(graphs), engine="jit"))
+print(f"edge union of the {K} process BNs: {int(consensus.sum())} edges "
+      f"(host == jit engine)")
 
 # fine-tuning pass (host GES, unrestricted) — preserves GES guarantees
 res = ges_host(data, bn.arities, init_adj=graphs[best], config=config)

@@ -5,7 +5,8 @@ from .fges import fges_host
 from .cges import CGESResult, cges, edge_add_limit
 from .partition import (partition_edges, variable_clusters, edge_subsets,
                         remerge_failed, pid_table_from_allowed, pid_tables)
-from .fusion import fuse, fusion_edge_union, sigma_consistent, gho_order
+from .fusion import (fuse, fuse_trace, fusion_edge_union, sigma_consistent,
+                     gho_order, check_fusion_engine, resolve_fusion_engine)
 from .ring import RingSpec, ring_cges, build_ring_program, fuse_jit
 from .sweeps import sweep
 from . import bdeu, dag, metrics, sweeps

@@ -31,6 +31,13 @@ and ``engine="jax"`` passes each process's static (n, W) pid_table
 fixed-shape program's per-round cost also tracks W = |E_i|, not n — the
 constant factor that is decisive for the paper's n ~ 1000 workloads.  The
 unrestricted fine-tuning pass stays full-n by construction (E = all edges).
+
+Fusion goes through the unified layer in ``core/fusion.py``:
+``fusion_engine`` picks the host (numpy) or traceable (jit) implementation
+of the sigma-consistent edge union — adjacency-for-adjacency identical, so
+the knob is purely a performance choice; ``None`` defaults from the
+``REPRO_FUSION_ENGINE`` env var (mirroring ``REPRO_COUNTS_IMPL``) and
+unknown values fail loudly up-front.
 """
 from __future__ import annotations
 
@@ -77,10 +84,14 @@ def cges(
     max_rounds: int = 50,
     edge_masks: Optional[np.ndarray] = None,
     seed_partition_ess: Optional[float] = None,
+    fusion_engine: Optional[str] = None,
 ) -> CGESResult:
     t0 = time.perf_counter()
     m, n = data.shape
     k = int(k)
+    # Resolve up-front so a typo'd engine (arg or REPRO_FUSION_ENGINE) fails
+    # loudly before any learning work starts.
+    fusion_engine = fusion.resolve_fusion_engine(fusion_engine)
 
     # ---- Stage 1: edge partitioning --------------------------------------
     if edge_masks is None:
@@ -123,7 +134,8 @@ def cges(
             if rounds == 0:
                 init = np.zeros((n, n), dtype=np.int8)
             else:
-                init = fusion.fusion_edge_union(graphs[i], pred).astype(np.int8)
+                init = fusion.fusion_edge_union(
+                    graphs[i], pred, engine=fusion_engine).astype(np.int8)
             if engine == "jax":
                 adj_i, score_i, n_ins, n_del = ges_jit(
                     data_j, ar_j, jnp.asarray(init),

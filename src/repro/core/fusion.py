@@ -1,4 +1,5 @@
-"""Bayesian-network fusion (Puerta et al. 2021) — the ring's merge operator.
+"""Bayesian-network fusion (Puerta et al. 2021) — the ring's merge operator,
+as ONE engine shared by the host driver and the compiled ring.
 
 ``fuse`` combines DAGs G_1..G_j into a single DAG that preserves every
 conditional *dependence* of each input (its independencies are a subset of
@@ -12,7 +13,11 @@ The ordering is produced by a greedy heuristic in the spirit of the paper's
 GHO: build sigma from the back by repeatedly picking the node that is
 cheapest to convert into a sink across all input DAGs (cost = number of
 out-edges inside the remaining subgraph; the first-order term of the full
-GHO cost — the covering additions it ignores are second-order).
+GHO cost — the covering additions it ignores are second-order).  The cost
+vector is maintained *incrementally*: sinking node s removes the edges
+``u -> s`` from every remaining subgraph, so each position subtracts the
+stacked adjacency column ``total[:, s]`` instead of re-summing all j (n, n)
+masks.
 
 Sink conversion (the core subroutine) processes nodes in reverse sigma
 order.  To sink ``v`` inside the remaining subgraph S we repeatedly pick the
@@ -22,30 +27,100 @@ the edge (adding Pa(v)\\Pa(w) into w and Pa(w)\\{v}\\Pa(v) into v) followed by
 reversal keeps the graph acyclic.  Invariant maintained: processed nodes
 never have out-edges into unprocessed nodes, hence parent sets stay inside S
 and the final graph is sigma-consistent.
+
+Depth is *maintained*, not recomputed: one longest-path-layer vector lives
+across the whole transform.  A covered reversal of v->w only changes the
+in-edges of v and w (after covering, Pa(w) = Pa(v) u {v}; neither v nor w
+can be an ancestor of the shared parents without creating a cycle or an
+alternative v~>w path), so the perturbation re-settles by iterating the pure
+Bellman update  depth[u] = max(0, max_{p in Pa(u) & S} depth[p] + 1)  from
+the previous depths until stationary.  The update's fixed point on a DAG is
+unique (induction over a topological order), and any seed washes out after
+longest-path-many steps, so the early-exit iteration is exact while touching
+only as many rounds as the perturbation actually propagates — instead of the
+full O(n)-sweep recompute per reversal the pre-refactor engines paid.
+Completing a node removes a *sink* of S, which shifts nobody's layer, so the
+shrink is one masked write.
+
+Engines (adjacency-for-adjacency identical — same GHO ranks, same
+lowest-index tie-breaks, same covered-reversal sequence):
+
+* ``engine="host"`` — numpy, the checkpointable cGES driver path.
+* ``engine="jit"``  — the traceable engine below (``fuse_trace``), also used
+  verbatim inside the shard_map ring (core/ring.py imports it); the j
+  per-input sigma transforms share one GHO rank vector and are batched with
+  ``vmap`` over the stacked DAGs, whose lockstep while_loops give every
+  reversal a shared early-exit bound (the loop runs max-over-inputs trips,
+  each depth re-settle is capped at |S| + 1 Bellman steps on the shrinking
+  remaining subgraph).
+
+``fusion_edge_union`` / ``fuse`` default their engine from the
+``REPRO_FUSION_ENGINE`` env var (mirroring ``REPRO_COUNTS_IMPL``); unknown
+names fail loudly via :func:`check_fusion_engine`.
 """
 from __future__ import annotations
 
+import os
 from typing import List, Optional, Sequence
 
 import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+FUSION_ENGINES = ("host", "jit")
+
+
+def check_fusion_engine(engine: str) -> None:
+    """Fail loudly on unknown engines (typos must not silently fall back)."""
+    if engine not in FUSION_ENGINES:
+        raise ValueError(
+            f"unknown fusion engine {engine!r}: expected one of "
+            f"{FUSION_ENGINES} (set via cges(fusion_engine=...), the "
+            f"--fusion-engine flag, or the REPRO_FUSION_ENGINE env var)")
+
+
+def resolve_fusion_engine(engine: Optional[str] = None) -> str:
+    """``None`` -> the REPRO_FUSION_ENGINE env default (else "host")."""
+    if engine is None:
+        engine = os.environ.get("REPRO_FUSION_ENGINE", "host")
+    check_fusion_engine(engine)
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# Host engine (numpy)
+# ---------------------------------------------------------------------------
+
+def _settle_depth_np(adj: np.ndarray, in_s: np.ndarray,
+                     depth: np.ndarray) -> np.ndarray:
+    """Iterate the pure Bellman depth update from ``depth`` until stationary.
+
+    The fixed point is the longest-path layer of the induced subgraph on
+    ``in_s`` (unique; any seed washes out after longest-path-many steps), so
+    seeding with the pre-mutation depths re-settles in as few rounds as the
+    perturbation propagates.  Nodes outside S stay -1.  The n + 1 cap never
+    binds on a DAG (layers are < |S|); it keeps garbage inputs containing a
+    cycle finite instead of looping forever.
+    """
+    sub = adj.astype(bool) & in_s[:, None] & in_s[None, :]
+    for _ in range(adj.shape[0] + 1):
+        parent_d = np.where(sub, depth[:, None], -1)
+        new = np.where(in_s, np.maximum(parent_d.max(axis=0) + 1, 0), -1)
+        if np.array_equal(new, depth):
+            break
+        depth = new
+    return depth
 
 
 def _subgraph_depth(adj: np.ndarray, in_s: np.ndarray) -> np.ndarray:
     """Longest-path layer of each node within the induced subgraph on ``in_s``.
 
-    depth[v] = 0 for sources; nodes outside S get -1.
+    depth[v] = 0 for sources; nodes outside S get -1.  (From-scratch oracle;
+    the transforms below maintain this vector incrementally.)
     """
-    n = adj.shape[0]
-    sub = adj.astype(bool) & in_s[:, None] & in_s[None, :]
-    depth = np.where(in_s, 0, -1).astype(np.int64)
-    for _ in range(n):
-        # depth[w] = 1 + max depth of parents (within S)
-        parent_d = np.where(sub, depth[:, None], -1)
-        new = np.where(in_s, np.maximum(depth, parent_d.max(axis=0) + 1), -1)
-        if np.array_equal(new, depth):
-            break
-        depth = new
-    return depth
+    return _settle_depth_np(adj, in_s, np.where(in_s, 0, -1).astype(np.int64))
 
 
 def sigma_consistent(adj: np.ndarray, sigma: Sequence[int]) -> np.ndarray:
@@ -60,14 +135,13 @@ def sigma_consistent(adj: np.ndarray, sigma: Sequence[int]) -> np.ndarray:
     for pos, v in enumerate(sigma):
         rank[v] = pos
 
-    processed = np.zeros(n, dtype=bool)
+    in_s = np.ones(n, dtype=bool)
+    depth = _settle_depth_np(adj, in_s, np.zeros(n, dtype=np.int64))
     for v in sorted(range(n), key=lambda u: -rank[u]):
-        in_s = ~processed  # v included
         while True:
             out_nbrs = np.flatnonzero(adj[v] & in_s)
             if out_nbrs.size == 0:
                 break
-            depth = _subgraph_depth(adj, in_s)
             w = int(out_nbrs[np.argmin(depth[out_nbrs])])
             # cover the edge v->w
             pa_v = adj[:, v].copy()
@@ -83,39 +157,223 @@ def sigma_consistent(adj: np.ndarray, sigma: Sequence[int]) -> np.ndarray:
             # reverse
             adj[v, w] = False
             adj[w, v] = True
-        processed[v] = True
+            # only the in-edges of v and w changed: re-settle from old depths
+            depth = _settle_depth_np(adj, in_s, depth)
+        # v is now a sink within S: dropping it shifts no other node's layer
+        in_s[v] = False
+        depth[v] = -1
     return adj
 
 
 def gho_order(adjs: Sequence[np.ndarray]) -> np.ndarray:
-    """Greedy heuristic ordering: cheapest-sink-first, built back-to-front."""
+    """Greedy heuristic ordering: cheapest-sink-first, built back-to-front.
+
+    cost(v) = total out-degree of v within the remaining subgraph, summed
+    over the input DAGs — maintained incrementally: sinking node s subtracts
+    the stacked column ``total[:, s]`` (the u -> s edges that left every
+    remaining subgraph) instead of re-summing all (n, n) masks per position.
+    Ties break to the lowest node index, matching the traceable engine.
+    """
     n = adjs[0].shape[0]
     remaining = np.ones(n, dtype=bool)
     order = np.empty(n, dtype=np.int64)
-    stack = [a.astype(bool) for a in adjs]
+    total = np.zeros((n, n), dtype=np.int64)
+    for a in adjs:
+        total += a.astype(bool)
+    sub_cost = total.sum(axis=1)
     for pos in range(n - 1, -1, -1):
-        # cost(v) = total out-degree of v within the remaining subgraph
-        costs = np.full(n, np.inf)
-        idx = np.flatnonzero(remaining)
-        sub_cost = np.zeros(n, dtype=np.int64)
-        for a in stack:
-            sub_cost += (a & remaining[None, :]).sum(axis=1)
-        costs[idx] = sub_cost[idx]
+        costs = np.where(remaining, sub_cost.astype(np.float64), np.inf)
         v = int(np.argmin(costs))
         order[pos] = v
         remaining[v] = False
+        sub_cost = sub_cost - total[:, v]
     return order
 
 
+# ---------------------------------------------------------------------------
+# Traceable engine (used verbatim inside the shard_map ring)
+# ---------------------------------------------------------------------------
+
+def _depth_step(adj: Array, in_s: Array, depth: Array) -> Array:
+    """One pure Bellman update of the longest-path layers within ``in_s``."""
+    sub = adj.astype(bool) & in_s[:, None] & in_s[None, :]
+    parent_d = jnp.where(sub, depth[:, None], jnp.int32(-1))
+    new = jnp.maximum(parent_d.max(axis=0) + 1, 0)
+    return jnp.where(in_s, new, -1).astype(jnp.int32)
+
+
+def _settle_depth(adj: Array, in_s: Array, depth: Array, bound) -> Array:
+    """Iterate :func:`_depth_step` from ``depth`` until stationary.
+
+    ``bound`` caps the trip count: layers within S are < |S|, so any seed is
+    stationary after at most |S| + 1 steps — callers pass the shrinking
+    |S| + 1, which shared-early-exits the loop (under vmap all stacked
+    inputs ride the same loop and stop when every lane has settled).
+    """
+    def cond(c):
+        prev, cur, it = c
+        return jnp.any(prev != cur) & (it < bound)
+
+    def body(c):
+        _, cur, it = c
+        return cur, _depth_step(adj, in_s, cur), it + 1
+
+    _, settled, _ = jax.lax.while_loop(
+        cond, body, (depth, _depth_step(adj, in_s, depth), jnp.int32(0)))
+    return settled
+
+
+def gho_rank_trace(adjs: Array) -> Array:
+    """Greedy cheapest-sink ranks over stacked DAGs (j, n, n) -> (n,) int32
+    (rank[v] = position of v in sigma).  Incremental cost maintenance, same
+    lowest-index tie-break as the host engine."""
+    n = adjs.shape[-1]
+    total = adjs.astype(jnp.int32).sum(axis=0)        # (n, n) stacked edges
+
+    def body(step, carry):
+        rank, remaining, cost = carry
+        c = jnp.where(remaining, cost, jnp.iinfo(jnp.int32).max)
+        v = jnp.argmin(c)  # deterministic: lowest index on ties
+        pos = n - 1 - step
+        return (rank.at[v].set(pos), remaining.at[v].set(False),
+                cost - total[:, v])
+
+    rank0 = jnp.zeros(n, dtype=jnp.int32)
+    remaining0 = jnp.ones(n, dtype=bool)
+    rank, _, _ = jax.lax.fori_loop(0, n, body, (rank0, remaining0,
+                                                total.sum(axis=1)))
+    return rank
+
+
+def sigma_consistent_trace(adj: Array, rank: Array) -> Array:
+    """Traceable sink-conversion transform (see :func:`sigma_consistent`).
+
+    Maintains ONE depth vector across all reversals of all nodes: each
+    covered reversal re-settles it from the previous values (`_settle_depth`
+    with the shrinking |S| + 1 bound) instead of recomputing all n layers,
+    and completing a node — a sink of S by construction — is a single masked
+    write.  Designed to be vmapped over stacked DAGs sharing one rank.
+    """
+    n = adj.shape[0]
+    adj = adj.astype(jnp.int8)
+    rank = rank.astype(jnp.int32)
+    order = jnp.argsort(-rank)  # processing order: highest rank first
+    idx = jnp.arange(n)
+    int_max = jnp.iinfo(jnp.int32).max
+
+    depth0 = _settle_depth(adj, jnp.ones(n, dtype=bool),
+                           jnp.zeros(n, jnp.int32), jnp.int32(n + 1))
+
+    def process_node(step, carry):
+        adj, depth = carry
+        v = order[step]
+        # unprocessed = nodes with rank <= rank[v] (v included)
+        in_s = rank <= rank[v]
+        bound = jnp.int32(n - step + 1)               # |S| + 1
+
+        def cond(c):
+            adj, _, it = c
+            out = jnp.take(adj, v, axis=0).astype(bool) & in_s
+            # each reversal removes one out-edge of v from S, so the n cap
+            # never binds — it is a shared safety bound for the vmapped loop
+            return out.any() & (it < n)
+
+        def body(c):
+            adj, depth, it = c
+            out = jnp.take(adj, v, axis=0).astype(bool) & in_s
+            w = jnp.argmin(jnp.where(out, depth, int_max))
+            pa_v = jnp.take(adj, v, axis=1).astype(bool)
+            pa_w = jnp.take(adj, w, axis=1).astype(bool)
+            add_to_w = pa_v & ~pa_w & (idx != w) & (idx != v)
+            add_to_v = pa_w & ~pa_v & (idx != v) & (idx != w)
+            adj = adj.at[:, w].set((pa_w | add_to_w).astype(adj.dtype))
+            pa_v2 = jnp.take(adj, v, axis=1).astype(bool)
+            adj = adj.at[:, v].set((pa_v2 | add_to_v).astype(adj.dtype))
+            adj = adj.at[v, w].set(0)
+            adj = adj.at[w, v].set(1)
+            # only the in-edges of v and w changed: re-settle, don't recompute
+            depth = _settle_depth(adj, in_s, depth, bound)
+            return adj, depth, it + 1
+
+        adj, depth, _ = jax.lax.while_loop(cond, body,
+                                           (adj, depth, jnp.int32(0)))
+        # v is now a sink within S: dropping it shifts no other node's layer
+        return adj, depth.at[v].set(-1)
+
+    adj, _ = jax.lax.fori_loop(0, n, process_node, (adj, depth0))
+    return adj
+
+
+def fuse_stack_trace(adjs: Array, rank: Optional[Array] = None) -> Array:
+    """Traceable j-ary fusion core: one GHO rank over the stacked (j, n, n)
+    DAGs, the j sigma transforms batched with vmap (they are independent
+    given the shared rank), union.  No empty-input guard — mirrors the host
+    :func:`fuse` exactly; Algorithm 1's skip lives in the pairwise wrappers.
+    """
+    adjs = adjs.astype(jnp.int8)
+    if rank is None:
+        rank = gho_rank_trace(adjs)
+    transformed = jax.vmap(sigma_consistent_trace, in_axes=(0, None))(adjs,
+                                                                      rank)
+    return transformed.astype(bool).any(axis=0).astype(jnp.int8)
+
+
+def fuse_trace(g_own: Array, g_pred: Array) -> Array:
+    """Traceable pairwise fusion — the ring's merge operator (core/ring.py
+    calls this verbatim inside shard_map).  Algorithm 1 skips fusion when
+    either side is empty."""
+    a = g_own.astype(jnp.int8)
+    b = g_pred.astype(jnp.int8)
+    fused = fuse_stack_trace(jnp.stack([a, b]))
+    own_empty = ~a.astype(bool).any()
+    pred_empty = ~b.astype(bool).any()
+    fused = jnp.where(own_empty, b, fused)
+    fused = jnp.where(pred_empty & ~own_empty, a, fused)
+    return fused
+
+
+# Compat names (pre-unification callers imported these via core/ring.py).
+fuse_jit = fuse_trace
+sigma_consistent_jit = sigma_consistent_trace
+
+
+def gho_order_jit(adj_a: Array, adj_b: Array) -> Array:
+    """Pairwise compat wrapper around :func:`gho_rank_trace`."""
+    return gho_rank_trace(jnp.stack([adj_a.astype(jnp.int8),
+                                     adj_b.astype(jnp.int8)]))
+
+
+_fuse_stack_jitted = jax.jit(fuse_stack_trace)
+
+
+# ---------------------------------------------------------------------------
+# Engine-dispatching host API
+# ---------------------------------------------------------------------------
+
 def fuse(
-    adjs: Sequence[np.ndarray], sigma: Optional[Sequence[int]] = None
+    adjs: Sequence[np.ndarray],
+    sigma: Optional[Sequence[int]] = None,
+    engine: Optional[str] = None,
 ) -> np.ndarray:
     """Fusion = union of sigma-consistent transforms (edge union of the paper).
 
     With ``sigma=None`` the GHO heuristic picks the ordering.  The result is a
-    DAG whose independencies are contained in every input's.
+    DAG whose independencies are contained in every input's.  ``engine``
+    picks the host (numpy) or traceable (jit) implementation — identical
+    adjacency-for-adjacency; ``None`` defaults from REPRO_FUSION_ENGINE.
     """
-    adjs = [a.astype(bool) for a in adjs]
+    engine = resolve_fusion_engine(engine)
+    adjs = [np.asarray(a).astype(bool) for a in adjs]
+    if engine == "jit":
+        stacked = jnp.asarray(np.stack(adjs).astype(np.int8))
+        if sigma is None:
+            out = _fuse_stack_jitted(stacked)
+        else:
+            rank = np.empty(len(sigma), dtype=np.int32)
+            rank[np.asarray(sigma, dtype=np.int64)] = np.arange(
+                len(sigma), dtype=np.int32)
+            out = _fuse_stack_jitted(stacked, jnp.asarray(rank))
+        return np.asarray(out).astype(bool)
     if sigma is None:
         sigma = gho_order(adjs)
     out = np.zeros_like(adjs[0])
@@ -124,10 +382,17 @@ def fuse(
     return out
 
 
-def fusion_edge_union(g_own: np.ndarray, g_pred: np.ndarray) -> np.ndarray:
-    """Algorithm 1, line 9:  Fusion.edgeUnion(G_i, G_{i-1})  — pairwise fusion."""
+def fusion_edge_union(
+    g_own: np.ndarray, g_pred: np.ndarray, engine: Optional[str] = None
+) -> np.ndarray:
+    """Algorithm 1, line 9:  Fusion.edgeUnion(G_i, G_{i-1})  — pairwise fusion.
+
+    Fusion is skipped when either side is empty (same guard the compiled
+    ring's :func:`fuse_trace` applies with jnp.where).
+    """
+    engine = resolve_fusion_engine(engine)
     if not g_own.any():
         return g_pred.astype(bool).copy()
     if not g_pred.any():
         return g_own.astype(bool).copy()
-    return fuse([g_own, g_pred])
+    return fuse([g_own, g_pred], engine=engine)

@@ -5,10 +5,14 @@ Mapping of the paper's distributed system onto JAX:
 
   * k ring processes        ->  k devices (or device groups) on a mesh axis
   * "send BN to successor"  ->  jax.lax.ppermute of the (n, n) int8 adjacency
-  * BN fusion               ->  fuse_jit: a fully traceable implementation of
-                                the sigma-consistent edge union (GHO ordering
-                                + covered-edge-reversal sink conversion),
-                                mirroring core/fusion.py op-for-op
+  * BN fusion               ->  core/fusion.fuse_trace: the traceable engine
+                                of the UNIFIED fusion layer (GHO ordering +
+                                covered-edge-reversal sink conversion, one
+                                maintained longest-path depth vector,
+                                vmap-batched sigma transforms) — the same
+                                code the host driver dispatches to, not a
+                                hand-mirrored copy; this module keeps no
+                                fusion math of its own (only re-exports)
   * constrained GES         ->  ges.ges_jit_body (lax.while_loop program);
                                 every candidate rescoring inside it — FES
                                 insert and BES delete columns alike — goes
@@ -66,98 +70,13 @@ def _shard_map_compat(f, *, mesh, in_specs, out_specs):
 
 from . import partition
 from .ges import GESConfig, ges_jit_body
+# Fusion lives in ONE place (core/fusion.py); the compat names below are
+# re-exported because pre-unification callers imported them from here.
+from .fusion import (fuse_trace, fuse_jit, gho_order_jit,  # noqa: F401
+                     sigma_consistent_jit)
 
 Array = jax.Array
 BIG = jnp.float32(3.0e38)
-
-
-# ---------------------------------------------------------------------------
-# Traceable fusion (device mirror of core/fusion.py)
-# ---------------------------------------------------------------------------
-
-def _depth_jit(adj: Array, in_s: Array) -> Array:
-    """Longest-path layer within the induced subgraph (fori over n)."""
-    n = adj.shape[0]
-    sub = adj.astype(bool) & in_s[:, None] & in_s[None, :]
-
-    def body(_, depth):
-        parent_d = jnp.where(sub, depth[:, None], -1)
-        return jnp.where(in_s, jnp.maximum(depth, parent_d.max(axis=0) + 1), -1)
-
-    depth0 = jnp.where(in_s, 0, -1)
-    return jax.lax.fori_loop(0, n, body, depth0)
-
-
-def gho_order_jit(adj_a: Array, adj_b: Array) -> Array:
-    """Greedy cheapest-sink ordering over two DAGs; returns rank (n,) int32
-    (rank[v] = position of v in sigma)."""
-    n = adj_a.shape[0]
-    a = adj_a.astype(jnp.int32)
-    b = adj_b.astype(jnp.int32)
-
-    def body(step, carry):
-        rank, remaining = carry
-        # cost(v) = out-degree within remaining subgraph, summed over DAGs
-        rem_f = remaining.astype(jnp.int32)
-        cost = (a * rem_f[None, :]).sum(1) + (b * rem_f[None, :]).sum(1)
-        cost = jnp.where(remaining, cost, jnp.iinfo(jnp.int32).max)
-        v = jnp.argmin(cost)  # deterministic: lowest index on ties
-        pos = n - 1 - step
-        return rank.at[v].set(pos), remaining.at[v].set(False)
-
-    rank0 = jnp.zeros(n, dtype=jnp.int32)
-    remaining0 = jnp.ones(n, dtype=bool)
-    rank, _ = jax.lax.fori_loop(0, n, body, (rank0, remaining0))
-    return rank
-
-
-def sigma_consistent_jit(adj: Array, rank: Array) -> Array:
-    """Traceable sink-conversion transform (see core/fusion.sigma_consistent)."""
-    n = adj.shape[0]
-    order = jnp.argsort(-rank)  # processing order: highest rank first
-
-    def process_node(step, adj):
-        v = order[step]
-        # unprocessed = nodes with rank <= rank[v] (v included)
-        in_s = rank <= rank[v]
-
-        def cond(adj):
-            out = jnp.take(adj, v, axis=0).astype(bool) & in_s
-            return out.any()
-
-        def body(adj):
-            out = jnp.take(adj, v, axis=0).astype(bool) & in_s
-            depth = _depth_jit(adj, in_s)
-            w = jnp.argmin(jnp.where(out, depth, jnp.iinfo(jnp.int32).max))
-            pa_v = jnp.take(adj, v, axis=1).astype(bool)
-            pa_w = jnp.take(adj, w, axis=1).astype(bool)
-            idx = jnp.arange(n)
-            add_to_w = pa_v & ~pa_w & (idx != w) & (idx != v)
-            add_to_v = pa_w & ~pa_v & (idx != v) & (idx != w)
-            adj = adj.at[:, w].set((pa_w | add_to_w).astype(adj.dtype))
-            pa_v2 = jnp.take(adj, v, axis=1).astype(bool)
-            adj = adj.at[:, v].set((pa_v2 | add_to_v).astype(adj.dtype))
-            adj = adj.at[v, w].set(0)
-            adj = adj.at[w, v].set(1)
-            return adj
-
-        return jax.lax.while_loop(cond, body, adj)
-
-    return jax.lax.fori_loop(0, n, process_node, adj)
-
-
-def fuse_jit(g_own: Array, g_pred: Array) -> Array:
-    """Traceable pairwise fusion: GHO order -> sigma-transform both -> union."""
-    rank = gho_order_jit(g_own, g_pred)
-    ta = sigma_consistent_jit(g_own.astype(jnp.int8), rank)
-    tb = sigma_consistent_jit(g_pred.astype(jnp.int8), rank)
-    fused = (ta.astype(bool) | tb.astype(bool)).astype(jnp.int8)
-    # Algorithm 1: fusion is skipped when either side is empty
-    own_empty = ~g_own.astype(bool).any()
-    pred_empty = ~g_pred.astype(bool).any()
-    fused = jnp.where(own_empty, g_pred.astype(jnp.int8), fused)
-    fused = jnp.where(pred_empty & ~own_empty, g_own.astype(jnp.int8), fused)
-    return fused
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +109,7 @@ def _ring_body(data, arities, edge_mask, init_g, pid_table=None,
 
     def one_round(g_own):
         g_pred = jax.lax.ppermute(g_own, axis, perm)
-        fused = fuse_jit(g_own, g_pred)
+        fused = fuse_trace(g_own, g_pred)
         adj, score, n_ins, n_del = ges_jit_body(
             data, arities, fused, edge_mask,
             jnp.int32(add_limit),

@@ -11,6 +11,12 @@ Engines:
   with per-process static (n, W) pid_tables so every compiled round pays
   W = |E_i|-wide sweeps; the unrestricted fine-tune still runs on host.
 
+Fusion on the host driver goes through the unified engine in
+``core/fusion.py``: ``--fusion-engine {host,jit}`` (default from
+REPRO_FUSION_ENGINE) picks the numpy or traceable implementation of the
+per-round sigma-consistent edge union — the ring engine always traces the
+same layer inside its compiled program.
+
 Fault tolerance (1000-node posture, per DESIGN.md; host engine only):
 * round-atomic checkpointing of the full ring state (k graphs + best score):
   a killed run resumes at the last completed round with identical results
@@ -38,8 +44,14 @@ from ..data.bn import benchmark_bn, forward_sample
 
 def ring_rounds(data, arities, edge_masks, config, add_limit, max_rounds,
                 ckpt_dir=None, fail_at_round=None, fail_member=None,
-                cache=None, verbose=True):
-    """The learning stage as an explicit, checkpointable round loop."""
+                cache=None, verbose=True, fusion_engine=None):
+    """The learning stage as an explicit, checkpointable round loop.
+
+    ``fusion_engine`` picks the host or traceable implementation of the
+    unified sigma-consistent edge union (core/fusion.py) — identical
+    adjacencies either way; ``None`` defaults from REPRO_FUSION_ENGINE.
+    """
+    fusion_engine = fusion.resolve_fusion_engine(fusion_engine)
     k0, n, _ = edge_masks.shape
     graphs = [np.zeros((n, n), dtype=np.int8) for _ in range(edge_masks.shape[0])]
     best_score, best_adj = -np.inf, np.zeros((n, n), dtype=np.int8)
@@ -75,7 +87,8 @@ def ring_rounds(data, arities, edge_masks, config, add_limit, max_rounds,
         for i in range(k):
             pred = graphs[(i - 1) % k]
             init = (np.zeros((n, n), dtype=np.int8) if rnd == 0
-                    else fusion.fusion_edge_union(graphs[i], pred).astype(np.int8))
+                    else fusion.fusion_edge_union(
+                        graphs[i], pred, engine=fusion_engine).astype(np.int8))
             res = ges_host(data, arities, init_adj=init,
                            allowed=edge_masks[i], add_limit=add_limit,
                            config=config, cache=cache)
@@ -127,6 +140,12 @@ def main():
                          "fully-compiled shard_map ring with per-process "
                          "(n, W) pid_tables — compiled per-round sweep cost "
                          "tracks W = |E_i|, not n")
+    ap.add_argument("--fusion-engine", default=None, choices=["host", "jit"],
+                    help="engine for the per-round sigma-consistent edge "
+                         "union on the host driver (core/fusion.py — the "
+                         "same layer the compiled ring traces); default "
+                         "reads REPRO_FUSION_ENGINE, else host.  Identical "
+                         "adjacencies either way")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-round", type=int, default=None)
     ap.add_argument("--fail-member", type=int, default=0)
@@ -190,7 +209,8 @@ def main():
         adj, score, rounds, masks = ring_rounds(
             data, bn.arities, masks, config, lim, args.max_rounds,
             ckpt_dir=args.ckpt_dir, fail_at_round=args.fail_at_round,
-            fail_member=args.fail_member, cache=cache)
+            fail_member=args.fail_member, cache=cache,
+            fusion_engine=args.fusion_engine)
 
     # fine-tuning pass (unrestricted GES) — carries GES's guarantees
     res = ges_host(data, bn.arities, init_adj=adj, allowed=None,
