@@ -7,9 +7,12 @@ benchmark scale.
 ``--sweep-json PATH`` additionally times the fused all-candidate BDeu sweeps
 against the per-candidate loop engine at paper scale — the FES insert column
 (one joint contraction), the BES delete column (one family-table build,
-marginalized per parent slot), the restricted-W ring column (contraction
-gathered down to the W = |E_i| candidates before it runs) and the
-compiled-ring per-round matrix (``ring_compiled``: the (W, n) pid_table
+marginalized per parent slot), the VMEM-resident Pallas delete column
+(``delete_pallas``: table build + per-slot marginalization + BDeu reduction
+in ONE kernel, with HBM-traffic accounting vs the two-step
+build-then-marginalize path it replaced), the restricted-W ring column
+(contraction gathered down to the W = |E_i| candidates before it runs) and
+the compiled-ring per-round matrix (``ring_compiled``: the (W, n) pid_table
 sweep the ges_jit/shard_map ring initializes each round from, vs the old
 full-n matrix) — and writes a machine-readable trajectory record; later PRs
 diff this file to track the sweep's perf over time.
@@ -270,6 +273,46 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
         rec["delete"]["engines"]["loop_segment"]["sweep_us"]
         / rec["delete"]["engines"]["fused"]["sweep_us"], 2)
 
+    # VMEM-resident Pallas delete column (kernels/bdeu_sweep.delete_scores:
+    # the one family table accumulates in VMEM scratch, every parent-slot
+    # marginal is reduced to its BDeu score in-kernel, only the (n,) column
+    # is written) vs the two-step path it replaced — bdeu_count Pallas table
+    # build, then jnp marginalization — which round-trips the (max_q, r_max)
+    # table through HBM once per column.  Interpret-mode wall time measures
+    # correctness-path cost; the HBM-byte accounting (analytic, logical f32
+    # sizes) is the hardware-independent part.
+    from repro.core import bdeu as _bdeu
+
+    @jax.jit
+    def two_step_delete_col(a):
+        # counts_impl="pallas" routes fused_delete_scores through its
+        # non-kernel branch: bdeu_count Pallas table build + jnp
+        # marginalization — the EXACT two-step engine the VMEM kernel
+        # replaced, so the baseline can never drift from the real path
+        return _bdeu.fused_delete_scores(
+            dj, aj, jnp.int32(0), a.astype(bool)[:, 0], 10.0, max_q, r_max,
+            counts_impl="pallas")
+
+    two_step_us = _time(two_step_delete_col, adjj, reps=reps)
+    vmem_us = rec["delete"]["engines"]["fused_pallas"]["sweep_us"]
+    table = 4 * max_q * r_max                      # logical f32 family table
+    inputs = 8 * m                                 # cfg + child int32 reads
+    two_step_bytes = (inputs + table               # table write to HBM
+                      + n * table                  # broadcast read, n ways
+                      + 2 * n * table              # marginal slab write+read
+                      + 4 * n)                     # column write
+    vmem_bytes = inputs + 4 * n                    # table/marginals stay VMEM
+    rec["delete_pallas"] = {
+        "vmem_resident_us": vmem_us,
+        "two_step_us": round(two_step_us, 1),
+        "speedup_vmem_vs_two_step": round(two_step_us / vmem_us, 2),
+        "hbm_bytes": {
+            "two_step": two_step_bytes,
+            "vmem_resident": vmem_bytes,
+            "traffic_ratio": round(two_step_bytes / vmem_bytes, 1),
+        },
+    }
+
     # Restricted-W ring column (|E_i| ~ n/k candidates): fused cost must
     # track W, not n — record the fused full-n column for the scaling ratio.
     pids = jnp.asarray(rng.choice(np.arange(1, n), size=w, replace=False)
@@ -355,6 +398,11 @@ def main():
               f"{rec['n']} table builds")
         print(f"bdeu_sweep/delete_fused,{d['engines']['fused']['sweep_us']:.0f},"
               f"speedup={d['speedup_fused_vs_loop']}x (1 table build)")
+        dp = rec["delete_pallas"]
+        print(f"bdeu_sweep/delete_pallas,{dp['vmem_resident_us']:.0f},"
+              f"VMEM-resident column; two_step={dp['two_step_us']:.0f}us "
+              f"speedup={dp['speedup_vmem_vs_two_step']}x "
+              f"hbm_traffic_ratio={dp['hbm_bytes']['traffic_ratio']}x")
         s = rec["restricted"]
         print(f"bdeu_sweep/restricted_fused,"
               f"{s['engines']['fused']['sweep_us']:.0f},"

@@ -28,7 +28,11 @@ The device engine's candidate sweeps additionally have a **fused** mode
 * delete (BES): every candidate table ``counts(Pa - {x})`` is a
   *marginalization* of the ONE current-family (q0, r) table over parent slot
   x — :func:`fused_delete_scores` builds that table once and reads the whole
-  delete column off it with zero re-counting (n table builds -> 1).
+  delete column off it with zero re-counting (n table builds -> 1).  Under
+  ``"fused_pallas"`` the build, the per-slot marginalizations and the BDeu
+  reductions all happen inside ONE VMEM-resident Pallas kernel
+  (``kernels/bdeu_sweep.delete_scores``), so the table never round-trips
+  through HBM and only the (n,)/(W,) score column is written back.
 
 The unified caller-facing layer over these primitives is ``repro.core.sweeps``.
 
@@ -395,41 +399,86 @@ def fused_delete_scores(
 
     ``pids``: optional (W,) candidate subset (ring E_i) — only the W
     marginalization maps are built and the return shape is (W,).
+
+    With ``counts_impl="fused_pallas"`` the whole two-step dance — table
+    build, HBM round-trip, jnp marginalization — collapses into ONE Pallas
+    kernel (``kernels/bdeu_sweep.delete_scores``): the family table is
+    accumulated in VMEM and each parent slot's marginal is reduced to its
+    BDeu score in-register, so only the (n,)/(W,) score column ever reaches
+    HBM.  Since a family has at most ``floor(log2(max_q))`` real (arity > 1)
+    parents before it overflows the table bound (each multiplies q0 by at
+    least 2), the kernel marginalizes that many slots; candidates that are
+    not real parents read the base-family score off slot 0 (the identity
+    marginalization, exactly this function's jnp no-op convention), and
+    overflow-guarded families (q0 > max_q) only need the +/-inf *pattern*
+    below, which the shared guard supplies.
     """
-    impl = single_impl(counts_impl)
+    n = data.shape[1]
     cfg0, q0 = _slot_encode(data, arities, parent_mask)
     child_col = jnp.take(data, child, axis=1)
     cfg0c = jnp.clip(cfg0, 0, max_q - 1)
-    if impl == "onehot":
-        counts0 = _dense_counts_onehot(cfg0c, child_col, r_max, max_q)
-    elif impl == "pallas":
-        from ..kernels.bdeu_count import contingency_counts
-        counts0 = contingency_counts(cfg0c, child_col, max_q=max_q, r_max=r_max)
-    else:
-        counts0 = _dense_counts_segment(cfg0c, child_col, r_max, max_q)
 
-    slot_ar = jnp.where(parent_mask, arities, 1).astype(jnp.int32)   # (n,)
+    slot_ar_full = jnp.where(parent_mask, arities, 1).astype(jnp.int32)  # (n,)
     # place value of slot x under the _slot_encode scan: prod_{i > x} ar_i
-    low = jnp.concatenate(
-        [jnp.cumprod(slot_ar[::-1])[::-1][1:], jnp.ones(1, jnp.int32)])
-    if pids is not None:
-        slot_ar = jnp.take(slot_ar, pids)
-        low = jnp.take(low, pids)
+    low_full = jnp.concatenate(
+        [jnp.cumprod(slot_ar_full[::-1])[::-1][1:], jnp.ones(1, jnp.int32)])
+    if pids is None:
+        slot_ar, low = slot_ar_full, low_full
+    else:
+        slot_ar = jnp.take(slot_ar_full, pids)
+        low = jnp.take(low_full, pids)
     w = slot_ar.shape[0]
 
-    j0 = jnp.arange(max_q, dtype=jnp.int32)[None, :]                 # (1, Q)
-    low_c = low[:, None]
-    hi = j0 // (low_c * slot_ar[:, None])
-    lo = j0 % low_c
-    mapped = hi * low_c + lo                                         # (w, Q)
-    flat = (jnp.arange(w, dtype=jnp.int32)[:, None] * max_q + mapped)
-    tiled = jnp.broadcast_to(counts0, (w,) + counts0.shape)
-    slab = jax.ops.segment_sum(
-        tiled.reshape(w * max_q, r_max), flat.reshape(-1),
-        num_segments=w * max_q).reshape(w, max_q, r_max)
+    if counts_impl == "fused_pallas":
+        from ..kernels.bdeu_sweep import delete_scores
 
-    q_del = (q0 // slot_ar).astype(jnp.float32)                      # (w,)
-    scores = _bdeu_from_counts(slab, q_del, arities[child], ess)
+        n_slots = max(1, min(n, max(int(max_q).bit_length() - 1, 1)))
+        real = parent_mask & (arities > 1)               # identity slots skip
+        rank = jnp.cumsum(real.astype(jnp.int32)) - 1
+        # rank clamp only engages when q0 > max_q (2^(S+1) > max_q), where
+        # finite values are garbage-by-convention and the guard below owns
+        # the +/-inf pattern
+        cand_slot_full = jnp.where(
+            real, jnp.minimum(rank, n_slots - 1) + 1, 0).astype(jnp.int32)
+        cand_slot = (cand_slot_full if pids is None
+                     else jnp.take(cand_slot_full, pids))
+        keys = jnp.where(real, jnp.arange(n, dtype=jnp.int32), n)
+        slot_ids = jnp.sort(keys)[:n_slots]              # first S real parents
+        live = slot_ids < n
+        ids_c = jnp.minimum(slot_ids, n - 1)
+        ar_s = jnp.where(live, jnp.take(slot_ar_full, ids_c), 1)
+        low_s = jnp.where(live, jnp.take(low_full, ids_c), 1)
+        qr = jnp.concatenate([
+            q0.astype(jnp.float32)[None],
+            (q0 // ar_s).astype(jnp.float32),
+            arities[child].astype(jnp.float32)[None]])
+        scores = delete_scores(cfg0c, child_col, cand_slot, ar_s, low_s, qr,
+                               ess=ess, max_q=max_q, r_max=r_max)
+    else:
+        impl = single_impl(counts_impl)
+        if impl == "onehot":
+            counts0 = _dense_counts_onehot(cfg0c, child_col, r_max, max_q)
+        elif impl == "pallas":
+            from ..kernels.bdeu_count import contingency_counts
+            counts0 = contingency_counts(cfg0c, child_col,
+                                         max_q=max_q, r_max=r_max)
+        else:
+            counts0 = _dense_counts_segment(cfg0c, child_col, r_max, max_q)
+
+        j0 = jnp.arange(max_q, dtype=jnp.int32)[None, :]             # (1, Q)
+        low_c = low[:, None]
+        hi = j0 // (low_c * slot_ar[:, None])
+        lo = j0 % low_c
+        mapped = hi * low_c + lo                                     # (w, Q)
+        flat = (jnp.arange(w, dtype=jnp.int32)[:, None] * max_q + mapped)
+        tiled = jnp.broadcast_to(counts0, (w,) + counts0.shape)
+        slab = jax.ops.segment_sum(
+            tiled.reshape(w * max_q, r_max), flat.reshape(-1),
+            num_segments=w * max_q).reshape(w, max_q, r_max)
+
+        q_del = (q0 // slot_ar).astype(jnp.float32)                  # (w,)
+        scores = _bdeu_from_counts(slab, q_del, arities[child], ess)
+
     log_q0 = jnp.sum(jnp.where(parent_mask,
                                jnp.log(arities.astype(jnp.float32)), 0.0))
     ok = (log_q0 - jnp.log(slot_ar.astype(jnp.float32))

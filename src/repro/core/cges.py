@@ -79,7 +79,7 @@ def cges(
     arities: np.ndarray,
     k: int = 4,
     limit: bool = True,
-    config: GESConfig = GESConfig(),
+    config: Optional[GESConfig] = None,
     engine: str = "host",
     max_rounds: int = 50,
     edge_masks: Optional[np.ndarray] = None,
@@ -89,6 +89,9 @@ def cges(
     t0 = time.perf_counter()
     m, n = data.shape
     k = int(k)
+    # built per call, not bound at import — honours REPRO_COUNTS_IMPL set
+    # after ``import repro`` (see GESConfig.counts_impl)
+    config = config if config is not None else GESConfig()
     # Resolve up-front so a typo'd engine (arg or REPRO_FUSION_ENGINE) fails
     # loudly before any learning work starts.
     fusion_engine = fusion.resolve_fusion_engine(fusion_engine)

@@ -24,8 +24,11 @@ from .sweeps import sweep
 def fges_host(
     data: np.ndarray,
     arities: np.ndarray,
-    config: GESConfig = GESConfig(),
+    config: Optional[GESConfig] = None,
 ) -> GESResult:
+    # built per call, not bound at import — honours REPRO_COUNTS_IMPL set
+    # after ``import repro`` (see GESConfig.counts_impl)
+    config = config if config is not None else GESConfig()
     m, n = data.shape
     r_max = int(arities.max())
     # First pass: pairwise deltas from the empty graph (one batched sweep

@@ -63,8 +63,12 @@ class GESConfig:
     # family-table build per child — not n either way):
     # "fused" (jnp) | "fused_pallas" (kernels/bdeu_sweep + bdeu_count).
     # The default honours REPRO_COUNTS_IMPL so CI can run the whole tier-1
-    # suite under an alternate backend (the fused-matrix CI leg).
-    counts_impl: str = os.environ.get("REPRO_COUNTS_IMPL", "segment")
+    # suite under an alternate backend (the fused CI legs).  default_factory,
+    # not a plain default: a dataclass default is bound once at class
+    # creation, which would silently ignore the env var whenever it is set
+    # after ``import repro`` (regression-tested).
+    counts_impl: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_COUNTS_IMPL", "segment"))
     tol: float = 1e-9             # minimum improvement to keep going
     incremental: bool = True      # column-cached delta rescoring
     child_chunk: Optional[int] = None  # sequential chunking of full sweeps
@@ -143,13 +147,15 @@ def ges_host(
     init_adj: Optional[np.ndarray] = None,
     allowed: Optional[np.ndarray] = None,
     add_limit: Optional[int] = None,
-    config: GESConfig = GESConfig(),
+    config: Optional[GESConfig] = None,
     phases: str = "both",            # "fes" | "bes" | "both"
     cache: Optional[ScoreCache] = None,
 ) -> GESResult:
     """Greedy FES+BES on host with jit-batched column rescoring."""
     m, n = data.shape
-    cfg = config
+    # built per call, not bound at import — honours REPRO_COUNTS_IMPL set
+    # after ``import repro`` (see GESConfig.counts_impl)
+    cfg = config if config is not None else GESConfig()
     r_max = int(arities.max())
     adj = (np.zeros((n, n), dtype=np.int8) if init_adj is None
            else init_adj.astype(np.int8).copy())
@@ -433,7 +439,7 @@ def ges_jit(
     init_adj: Array,
     allowed: Array,
     add_limit: Optional[int] = None,
-    config: GESConfig = GESConfig(),
+    config: Optional[GESConfig] = None,
     r_max: Optional[int] = None,
     pid_table: Optional[Array] = None,
 ):
@@ -444,6 +450,7 @@ def ges_jit(
     cover ``allowed`` column-for-column (partition.pid_table_from_allowed
     builds it); candidates absent from the table are never scored.
     """
+    config = config if config is not None else GESConfig()
     n = init_adj.shape[0]
     lim = jnp.int32(n * n if add_limit is None else add_limit)
     if r_max is None:

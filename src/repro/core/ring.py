@@ -176,7 +176,7 @@ def ring_cges(
     edge_masks: np.ndarray,
     mesh: Mesh,
     spec: RingSpec,
-    config: GESConfig = GESConfig(),
+    config: Optional[GESConfig] = None,
     add_limit: Optional[int] = None,
     restricted: bool = True,
     pid_tables: Optional[np.ndarray] = None,
@@ -195,6 +195,7 @@ def ring_cges(
     """
     k, n, _ = edge_masks.shape
     assert k == spec.k
+    config = config if config is not None else GESConfig()
     r_max = int(arities.max())
     lim = int(n * n if add_limit is None else add_limit)
     prog = build_ring_program(mesh, spec, config, r_max, lim,

@@ -38,8 +38,14 @@ Backends (selected by ``counts_impl``):
   build marginalized over each parent slot
   (:func:`bdeu.fused_delete_scores`).
 * ``"fused_pallas"`` — same math with the tiled Pallas kernels
-  (``kernels/bdeu_sweep`` for insert contractions, ``kernels/bdeu_count``
-  for the delete sweep's single family table).
+  (``kernels/bdeu_sweep``): insert columns run the joint one-hot
+  contraction kernel, and delete columns run the **VMEM-resident** delete
+  kernel (``delete_scores``) — the one current-family (max_q, r) table is
+  accumulated in VMEM scratch and each parent slot's marginal is reduced
+  straight to its BDeu score in-kernel, so the table never round-trips
+  through HBM and only the (n,)/(W,) score column is written back
+  (interpret mode on CPU, compiled on TPU; identical masking/guard
+  conventions to the jnp engines).
 
 Convention (stronger than the raw bdeu primitives): returned columns and
 matrices are **masked** — entries that are not a legal toggle (self-loops,

@@ -14,6 +14,15 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def _resolve_interpret(interpret) -> bool:
+    """``interpret=None`` (the default) resolves per-backend at trace time:
+    interpret mode everywhere except an actual TPU, where the validated
+    kernel compiles.  An explicit bool wins."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 @partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "interpret", "use_ref"))
 def contingency_counts(
     cfg: jax.Array,
@@ -22,15 +31,17 @@ def contingency_counts(
     max_q: int,
     r_max: int,
     tile_m: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """(max_q, r_max) f32 contingency table for one (parent-config, child) pair.
 
     Pads m to a tile multiple (sentinel cfg = max_q counts nothing) and the
     child axis to the 128-lane MXU boundary; the validated Pallas kernel runs
-    in interpret mode on CPU and compiled on TPU.
+    in interpret mode on CPU and compiled on TPU (``interpret=None`` resolves
+    per-backend).
     """
+    interpret = _resolve_interpret(interpret)
     m = cfg.shape[0]
     m_pad = _round_up(max(m, tile_m), tile_m)
     r_pad = _round_up(r_max, 128)

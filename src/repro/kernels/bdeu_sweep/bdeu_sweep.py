@@ -1,11 +1,13 @@
-"""Pallas TPU kernel: fused all-candidate contingency sweep for BDeu deltas.
+"""Pallas TPU kernels: fused all-candidate sweeps for BDeu deltas.
 
-The FES candidate sweep for one child evaluates all n families (Pa + {x}) at
-once.  The per-candidate loop engine issues n independent ``bdeu_count``
-contractions — each a memory-bound (max_q, m) @ (m, r_max) matmul using
-r_max/128 of the MXU lanes.  The extended parent configuration factorizes,
-``cfg_x = (cfg0, X_x)``, so the whole sweep is ONE joint contraction batched
-over the child's value b:
+Two kernels, one per GES phase:
+
+**Insert (FES)** — ``sweep_counts_pallas``.  The candidate sweep for one
+child evaluates all n families (Pa + {x}) at once.  The per-candidate loop
+engine issues n independent ``bdeu_count`` contractions — each a memory-bound
+(max_q, m) @ (m, r_max) matmul using r_max/128 of the MXU lanes.  The
+extended parent configuration factorizes, ``cfg_x = (cfg0, X_x)``, so the
+whole sweep is ONE joint contraction batched over the child's value b:
 
     counts[b, j0, x*r_max + a] = sum_t [child[t]=b][cfg0[t]=j0][data[t,x]=a]
                                = OH(cfg0 | child=b)^T @ OH_all(data)
@@ -25,6 +27,33 @@ Padding:   out-of-range cfg (>= max_q) or child (>= r_max, the m-padding
            count columns.  Zero-count cells cancel exactly in the BDeu sum
            (lgamma(N + a) - lgamma(a) = 0 at N = 0), so padding is exact.
 Counting is exact in f32 for m << 2^24, same argument as ``bdeu_count``.
+
+**Delete (BES)** — ``delete_scores_pallas``.  Every candidate table
+``counts(Pa - {x})`` is a *marginalization* of the ONE current-family
+(max_q, r) table over parent slot x (see ``bdeu.fused_delete_scores`` for the
+radix-code algebra).  The two-step fused path builds that table with
+``bdeu_count`` and hands the slab back to jnp, round-tripping it through HBM
+once per column.  This kernel keeps it VMEM-resident end-to-end: the table is
+accumulated into a VMEM scratch across the m grid, and on the final grid step
+each of the <= n_slots parent-slot marginals is formed *in VMEM* and reduced
+straight to its BDeu score — only the (K,) per-candidate score column is ever
+written back.
+
+Grid:      (m_tiles,) — sequential on TPU; the (max_q, r_pad) scratch
+           accumulator is revisited, exactly like ``bdeu_count``.
+Marginalization:  TPU has no fast gather/scatter, so the digit-sum
+           M[j'] = sum_{t(j0) = j'} counts[j0] with
+           t(j0) = (j0 // (low*ar)) * low + (j0 % low)
+           is a scatter-by-matmul: the (chunk_q, max_q) one-hot of t built
+           from iota compares, contracted against the matching scratch rows
+           (chunked so the one-hot never exceeds a VMEM-friendly block).
+           Identity slots (ar = 1, low = 1) give t = j0 — the base family —
+           so padded slots are exact no-ops, and slot 0 is the base score.
+Output:    out[c] = slot_scores[cand_slot[c]] via a one-hot gather: slot 0
+           (base) for candidates not in Pa (the jnp reference's no-op
+           convention), slot s+1 for the candidate deleting parent slot s.
+The max_q overflow guard (+/-inf) stays in ``bdeu.fused_delete_scores`` —
+identical conventions for the kernel and the jnp reference by construction.
 """
 from __future__ import annotations
 
@@ -33,6 +62,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import bdeu_table_score
 
 
 def _kernel(cfg_ref, child_ref, data_ref, out_ref, *, max_q: int, r_max: int):
@@ -98,3 +130,129 @@ def sweep_counts_pallas(
         out_shape=jax.ShapeDtypeStruct((r_max, max_q, n * r_max), jnp.float32),
         interpret=interpret,
     )(cfg, child, data)
+
+
+def _delete_kernel(cfg_ref, child_ref, cand_ref, ar_ref, low_ref, qr_ref,
+                   out_ref, counts_ref, *, max_q: int, r_pad: int,
+                   n_slots: int, ess: float, chunk_q: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _zero():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    # ---- phase 1: accumulate the current-family table into VMEM scratch ----
+    cfg = cfg_ref[...]          # (TILE_M,) int32, sentinel max_q on padding
+    child = child_ref[...]      # (TILE_M,) int32
+    tile_m = cfg.shape[0]
+    q_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_m, max_q), 1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_m, r_pad), 1)
+    oh_cfg = (cfg[:, None] == q_iota).astype(jnp.float32)
+    oh_child = (child[:, None] == r_iota).astype(jnp.float32)
+    counts_ref[...] += jax.lax.dot_general(
+        oh_cfg, oh_child,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- phase 2 (final step): marginalize + reduce, all in VMEM ----------
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _reduce():
+        qr = qr_ref[...]                   # [q0, q_del_0..q_del_{S-1}, r]
+        r = qr[n_slots + 1]
+
+        def bdeu(tbl, q):
+            # THE shared reduction (plain jnp, traces in-kernel): zero-count
+            # rows/cells (incl. the r_pad padding columns) contribute 0
+            return bdeu_table_score(tbl, q, r, ess)
+
+        slot_scores = [bdeu(counts_ref[...], qr[0])]     # slot 0: base family
+        ar_v = ar_ref[...]
+        low_v = low_ref[...]
+        for s in range(n_slots):
+            ar = ar_v[s]
+            low = low_v[s]
+
+            def chunk_body(c, M):
+                # rows j0 in [c*chunk_q, (c+1)*chunk_q) scatter to t(j0);
+                # one-hot-matmul instead of scatter (TPU-native).  When
+                # chunk_q does not divide max_q the last chunk is shifted
+                # back to stay in bounds and its already-processed overlap
+                # rows are masked to the sel-row-zero sentinel.
+                start = jnp.minimum(c * chunk_q, max_q - chunk_q)
+                j0 = (jax.lax.broadcasted_iota(
+                    jnp.int32, (chunk_q, max_q), 0) + start)
+                t = (j0 // (low * ar)) * low + (j0 % low)
+                t = jnp.where(j0 >= c * chunk_q, t, max_q)
+                jp = jax.lax.broadcasted_iota(jnp.int32, (chunk_q, max_q), 1)
+                sel = (t == jp).astype(jnp.float32)      # (chunk_q, max_q)
+                rows = pl.load(counts_ref,
+                               (pl.ds(start, chunk_q), slice(None)))
+                return M + jax.lax.dot_general(
+                    sel, rows,
+                    dimension_numbers=(((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+
+            n_chunks = -(-max_q // chunk_q)
+            M = jax.lax.fori_loop(0, n_chunks, chunk_body,
+                                  jnp.zeros((max_q, r_pad), jnp.float32))
+            slot_scores.append(bdeu(M, qr[1 + s]))
+
+        sv = jnp.stack(slot_scores)                      # (n_slots + 1,)
+        cand = cand_ref[...]                             # (K_pad,) slot ids
+        k_pad = cand.shape[0]
+        s_iota = jax.lax.broadcasted_iota(jnp.int32, (k_pad, n_slots + 1), 1)
+        oh = (cand[:, None] == s_iota).astype(jnp.float32)
+        out_ref[...] = jnp.sum(oh * sv[None, :], axis=1)
+
+
+def delete_scores_pallas(
+    cfg: jax.Array,
+    child: jax.Array,
+    cand_slot: jax.Array,
+    slot_ar: jax.Array,
+    slot_low: jax.Array,
+    qr: jax.Array,
+    *,
+    max_q: int,
+    r_pad: int,
+    ess: float,
+    tile_m: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """(K,) BDeu scores of the delete-candidate families, VMEM-resident.
+
+    cfg/child: (m,) int32, m % tile_m == 0 (cfg sentinel max_q on padding).
+    cand_slot: (K,) int32 — 0 for candidates not in Pa (score = base family),
+    s+1 for the candidate that deletes parent slot s.  slot_ar/slot_low:
+    (n_slots,) int32 per-slot arity and radix place value (1/1 = identity
+    padding).  qr: (n_slots + 2,) f32 = [q0, q_del per slot..., r_child].
+    K and n_slots are static via the argument shapes (callers pad; see
+    ops.delete_scores).
+    """
+    m = cfg.shape[0]
+    assert m % tile_m == 0, (m, tile_m)
+    n_slots = slot_ar.shape[0]
+    k_pad = cand_slot.shape[0]
+    # One-hot chunk bound: the (chunk_q, max_q) scatter matrix stays <= ~4 MB
+    # of VMEM at max_q = 4096 regardless of divisibility (a non-multiple
+    # max_q gets a shifted, overlap-masked final chunk — see _delete_kernel).
+    chunk_q = min(max_q, 256)
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_delete_kernel, max_q=max_q, r_pad=r_pad,
+                          n_slots=n_slots, ess=ess, chunk_q=chunk_q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((k_pad,), lambda i: (0,)),
+            pl.BlockSpec((n_slots,), lambda i: (0,)),
+            pl.BlockSpec((n_slots,), lambda i: (0,)),
+            pl.BlockSpec((n_slots + 2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k_pad,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((max_q, r_pad), jnp.float32)],
+        interpret=interpret,
+    )(cfg, child, cand_slot, slot_ar, slot_low, qr)

@@ -1,4 +1,4 @@
-"""Jit'd public wrapper for the bdeu_sweep Pallas kernel."""
+"""Jit'd public wrappers for the bdeu_sweep Pallas kernels."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,12 +6,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .bdeu_sweep import sweep_counts_pallas
-from .ref import sweep_counts_ref
+from .bdeu_sweep import delete_scores_pallas, sweep_counts_pallas
+from .ref import delete_scores_ref, sweep_counts_ref
 
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _resolve_interpret(interpret) -> bool:
+    """``interpret=None`` (the default) resolves per-backend at trace time:
+    interpret mode everywhere except an actual TPU, where the validated
+    kernel compiles — so 'interpret on CPU, compiled on TPU' is the
+    behavior, not just the docstring.  An explicit bool wins."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 @partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "tile_n",
@@ -25,7 +35,7 @@ def sweep_counts(
     r_max: int,
     tile_m: int = 256,
     tile_n: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """(r_max, max_q, n*r_max) f32 joint sweep counts for one child.
@@ -35,8 +45,9 @@ def sweep_counts(
     Pads m and n to tile multiples with counting-neutral sentinels (cfg=max_q,
     child/data=r_max: all-zero one-hot rows/columns) and slices the padding
     back off; the validated Pallas kernel runs in interpret mode on CPU and
-    compiled on TPU.
+    compiled on TPU (``interpret=None`` resolves per-backend).
     """
+    interpret = _resolve_interpret(interpret)
     m, n = data.shape
     m_pad = _round_up(max(m, tile_m), tile_m)
     n_pad = _round_up(max(n, tile_n), tile_n)
@@ -69,7 +80,7 @@ def sweep_counts_restricted(
     r_max: int,
     tile_m: int = 256,
     tile_n: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """(r_max, max_q, W*r_max) joint sweep counts over the W candidates in
@@ -93,3 +104,69 @@ def sweep_counts_restricted(
     return sweep_counts(cfg, child, data_w, max_q=max_q, r_max=r_max,
                         tile_m=tile_m, tile_n=tn, interpret=interpret,
                         use_ref=use_ref)
+
+
+@partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "tile_m",
+                                   "interpret", "use_ref"))
+def delete_scores(
+    cfg: jax.Array,
+    child: jax.Array,
+    cand_slot: jax.Array,
+    slot_ar: jax.Array,
+    slot_low: jax.Array,
+    qr: jax.Array,
+    *,
+    ess: float,
+    max_q: int,
+    r_max: int,
+    tile_m: int = 256,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """(K,) BDeu scores of ALL delete candidates of one child — the
+    VMEM-resident BES column.
+
+    cfg/child: (m,) int32 current-family radix codes and child values.
+    cand_slot: (K,) int32 mapping each candidate to its marginalization slot
+    (0 = not a parent -> base-family score), slot_ar/slot_low: (S,) int32
+    per-slot arity/place value (identity 1/1 on padding slots), qr:
+    (S + 2,) f32 = [q0, q_del per slot..., r_child].  The ONE family table is
+    built in VMEM and each slot marginal is reduced to its score without the
+    (max_q, r) slab ever reaching HBM; only this (K,) column is written.
+
+    Pads m to a tile multiple (sentinel cfg = max_q counts nothing) and the
+    candidate axis to the 128-lane boundary (slot 0, sliced back off).  The
+    child axis of the VMEM table is padded to the f32 sublane boundary in
+    interpret mode and the full 128-lane boundary compiled — zero-count
+    padding columns contribute exactly 0 either way.  The validated Pallas
+    kernel runs in interpret mode on CPU and compiled on TPU
+    (``interpret=None`` resolves per-backend); the max_q overflow guard
+    stays in ``bdeu.fused_delete_scores`` (shared with the jnp reference
+    path).
+    """
+    interpret = _resolve_interpret(interpret)
+    m = cfg.shape[0]
+    k = cand_slot.shape[0]
+    m_pad = _round_up(max(m, tile_m), tile_m)
+    k_pad = _round_up(max(k, 1), 128)
+    r_pad = _round_up(r_max, 8 if interpret else 128)
+    cfg_p = jnp.full((m_pad,), max_q, dtype=jnp.int32).at[:m].set(
+        cfg.astype(jnp.int32))
+    child_p = jnp.zeros((m_pad,), dtype=jnp.int32).at[:m].set(
+        child.astype(jnp.int32))
+    cand_p = jnp.zeros((k_pad,), dtype=jnp.int32).at[:k].set(
+        cand_slot.astype(jnp.int32))
+    if use_ref:
+        scores = delete_scores_ref(cfg_p, child_p, cand_p,
+                                   slot_ar.astype(jnp.int32),
+                                   slot_low.astype(jnp.int32),
+                                   qr.astype(jnp.float32),
+                                   max_q=max_q, r_pad=r_pad, ess=ess)
+    else:
+        scores = delete_scores_pallas(cfg_p, child_p, cand_p,
+                                      slot_ar.astype(jnp.int32),
+                                      slot_low.astype(jnp.int32),
+                                      qr.astype(jnp.float32),
+                                      max_q=max_q, r_pad=r_pad, ess=ess,
+                                      tile_m=tile_m, interpret=interpret)
+    return scores[:k]

@@ -1,8 +1,9 @@
-"""Pure-jnp oracle for the bdeu_sweep kernel."""
+"""Pure-jnp oracles for the bdeu_sweep kernels."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.scipy.special import gammaln
 
 
 def sweep_counts_ref(
@@ -24,3 +25,69 @@ def sweep_counts_ref(
         jnp.where(valid[:, None], oh_all, 0.0), idx,
         num_segments=r_max * max_q + 1)
     return counts[:r_max * max_q].reshape(r_max, max_q, n * r_max)
+
+
+def bdeu_table_score(tbl: jax.Array, q, r, ess: float) -> jax.Array:
+    """BDeu score of ONE dense (Q, R) count table with true hyperparameters
+    (q, r) — mirrors ``bdeu._bdeu_from_counts`` for a single family.
+
+    Zero-count rows/cells (dense padding) contribute exactly 0
+    (lgamma(N + a) - lgamma(a) = 0 at N = 0).  This is THE reduction shared
+    by the VMEM-resident Pallas delete kernel and its jnp oracle — plain jnp
+    ops, so it traces inside the kernel and on host alike; keeping it in one
+    place means a numerical tweak cannot make them silently disagree.
+    """
+    a_j = ess / q
+    a_jk = ess / (q * r)
+    n_ij = jnp.sum(tbl, axis=1)
+    term_j = jnp.sum(gammaln(a_j) - gammaln(n_ij + a_j))
+    term_jk = jnp.sum(gammaln(tbl + a_jk) - gammaln(a_jk))
+    return term_j + term_jk
+
+
+def delete_scores_ref(
+    cfg: jax.Array,
+    child: jax.Array,
+    cand_slot: jax.Array,
+    slot_ar: jax.Array,
+    slot_low: jax.Array,
+    qr: jax.Array,
+    *,
+    max_q: int,
+    r_pad: int,
+    ess: float,
+) -> jax.Array:
+    """(K,) delete-candidate BDeu scores; the jnp oracle for
+    ``delete_scores_pallas`` (same contract, segment-sum realization).
+
+    Builds the ONE current-family (max_q, r_pad) table (out-of-range rows
+    ignored, like ``sweep_counts_ref``), marginalizes it per parent slot with
+    the digit-sum relabeling t(j0) = (j0 // (low*ar)) * low + (j0 % low),
+    reduces each marginal to its BDeu score with the slot's (q_del, r)
+    hyperparameters, and gathers per candidate through ``cand_slot`` —
+    slot 0 is the unmarginalized base family.
+    """
+    n_slots = slot_ar.shape[0]
+    valid = (cfg >= 0) & (cfg < max_q) & (child >= 0) & (child < r_pad)
+    flat = jnp.where(valid,
+                     jnp.clip(cfg, 0, max_q - 1) * r_pad
+                     + jnp.clip(child, 0, r_pad - 1),
+                     max_q * r_pad)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat, dtype=jnp.float32), flat,
+        num_segments=max_q * r_pad + 1)[:max_q * r_pad]
+    counts = counts.reshape(max_q, r_pad)
+
+    r = qr[n_slots + 1]
+    j0 = jnp.arange(max_q, dtype=jnp.int32)
+
+    def slot_score(s):
+        ar, low = slot_ar[s], slot_low[s]
+        t = (j0 // (low * ar)) * low + (j0 % low)
+        marg = jax.ops.segment_sum(counts, t, num_segments=max_q)
+        return bdeu_table_score(marg, qr[1 + s], r, ess)
+
+    scores = [bdeu_table_score(counts, qr[0], r, ess)]
+    for s in range(n_slots):
+        scores.append(slot_score(s))
+    return jnp.take(jnp.stack(scores), cand_slot)

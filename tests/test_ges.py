@@ -147,3 +147,19 @@ def test_score_cache_hits(case):
     before = cache.misses
     ges_host(data, bn.arities, config=CFG, cache=cache)  # identical run
     assert cache.hits >= before  # second run served from cache
+
+
+def test_counts_impl_env_honoured_after_import(monkeypatch):
+    """REPRO_COUNTS_IMPL set AFTER ``import repro`` must be honoured: the
+    GESConfig default is a default_factory (evaluated per instantiation),
+    not a plain dataclass default (bound once at class creation)."""
+    monkeypatch.setenv("REPRO_COUNTS_IMPL", "fused")
+    assert GESConfig().counts_impl == "fused"
+    monkeypatch.setenv("REPRO_COUNTS_IMPL", "fused_pallas")
+    assert GESConfig().counts_impl == "fused_pallas"
+    monkeypatch.delenv("REPRO_COUNTS_IMPL")
+    assert GESConfig().counts_impl == "segment"
+    # a typo'd env value still fails loudly at construction
+    monkeypatch.setenv("REPRO_COUNTS_IMPL", "fuesd")
+    with pytest.raises(ValueError, match="unknown counts_impl"):
+        GESConfig()

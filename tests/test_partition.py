@@ -63,3 +63,48 @@ def test_partition_edges_end_to_end(small_data, small_bn):
     off = ~np.eye(n, dtype=bool)
     assert masks.shape == (3, n, n)
     assert np.all(masks.sum(axis=0)[off] == 1)
+
+
+def _edge_subsets_loop(clusters, n):
+    """The pre-vectorization reference: sequential greedy smallest-subset
+    assignment of cross pairs (kept as the mask-identity oracle)."""
+    k = len(clusters)
+    masks = np.zeros((k, n, n), dtype=bool)
+    cluster_of = np.empty(n, dtype=np.int64)
+    for ci, members in enumerate(clusters):
+        for v in members:
+            cluster_of[v] = ci
+        for x in members:
+            for y in members:
+                if x != y:
+                    masks[ci, x, y] = True
+    sizes = masks.sum(axis=(1, 2))
+    for x in range(n):
+        for y in range(x + 1, n):
+            if cluster_of[x] != cluster_of[y]:
+                tgt = int(np.argmin(sizes))
+                masks[tgt, x, y] = True
+                masks[tgt, y, x] = True
+                sizes[tgt] += 2
+    return masks
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_edge_subsets_mask_identical_to_loop_reference(seed):
+    """The vectorized sorted-token-merge assignment reproduces the
+    sequential greedy loop mask-for-mask (same targets, same order)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 28))
+    k = int(rng.integers(1, min(n, 6) + 1))
+    perm = rng.permutation(n)
+    cuts = (np.sort(rng.choice(np.arange(1, n), size=k - 1, replace=False))
+            if k > 1 else [])
+    clusters = [list(c) for c in np.split(perm, cuts)]
+    got = partition.edge_subsets(clusters, n)
+    want = _edge_subsets_loop(clusters, n)
+    assert np.array_equal(got, want), (seed, n, k)
+
+
+def test_edge_subsets_empty():
+    assert partition.edge_subsets([], 0).shape == (0, 0, 0)

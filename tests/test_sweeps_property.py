@@ -151,3 +151,58 @@ def test_property_pid_table_ges_jit_trajectory(seed):
     assert np.isclose(float(s_full), float(s_res), rtol=1e-6), seed
     res_h = ges_host(data, arities, allowed=allowed, config=cfg)
     assert np.array_equal(res_h.adj, np.asarray(a_res)), seed
+
+
+def test_pid_tables_degenerate_shapes():
+    """n in {0, 1} and all-empty E_i masks build well-defined self-pad /
+    zero-width tables instead of raising (the shapes a trivial partition or
+    an empty edge subset hands the ring)."""
+    from repro.core.partition import pid_tables
+
+    # n = 0: nothing to sweep — (k, 0, 0) tables
+    assert pid_table_from_allowed(np.zeros((0, 0), bool)).shape == (0, 0)
+    assert pid_tables(np.zeros((2, 0, 0), bool)).shape == (2, 0, 0)
+    # n = 1: the only slot is the self-pad
+    t1 = pid_table_from_allowed(np.zeros((1, 1), bool))
+    assert t1.shape == (1, 1) and t1[0, 0] == 0
+    k1 = pid_tables(np.ones((3, 1, 1), bool))       # self-loop cleared
+    assert k1.shape == (3, 1, 1) and (k1 == 0).all()
+    # all-empty masks at n > 1: every slot self-pads its own column
+    n = 5
+    t = pid_table_from_allowed(np.zeros((n, n), bool))
+    assert t.shape == (n, 1)
+    assert np.array_equal(t[:, 0], np.arange(n))
+    ks = pid_tables(np.zeros((2, n, n), bool))
+    assert ks.shape == (2, n, 1)
+    # explicit zero width is allowed when nothing is occupied
+    assert pid_table_from_allowed(np.zeros((n, n), bool), width=0).shape == \
+        (n, 0)
+    # but a width below the real occupancy still fails loudly
+    allowed = np.zeros((n, n), bool)
+    allowed[[1, 2], 0] = True
+    try:
+        pid_table_from_allowed(allowed, width=1)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("width < occupancy must raise")
+
+
+def test_empty_pid_table_sweep_is_all_masked():
+    """A degenerate all-self-pad pid table flows through the sweep engine:
+    the (1, n) restricted matrix is -inf everywhere (nothing toggleable)."""
+    rng = np.random.default_rng(0)
+    n, m = 4, 50
+    arities = rng.integers(2, 4, size=n)
+    data = np.stack([rng.integers(0, a, size=m) for a in arities], 1)
+    tbl = pid_table_from_allowed(np.zeros((n, n), bool))
+    dj, aj = _jnp(data, arities)
+    for kind in ("insert", "delete"):
+        for impl in IMPLS:
+            D = np.asarray(sweep(dj, aj, jnp.zeros((n, n), jnp.int8),
+                                 kind=kind, pid_table=jnp.asarray(tbl),
+                                 ess=10.0, max_q=64,
+                                 r_max=int(arities.max()),
+                                 counts_impl=impl))
+            assert D.shape == (1, n)
+            assert np.all(np.isneginf(D)), (kind, impl)
