@@ -28,7 +28,20 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
+
+# The data_sharded sweep entry times d-device data-axis meshes (d up to 4);
+# XLA_FLAGS must be set before the backend initializes, so peek argv before
+# the jax import (only when the sweep record was asked for — the plain
+# kernel table keeps the default single-device platform).
+if "--sweep-json" in " ".join(sys.argv[1:]) and \
+        "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
 
 import jax
 import jax.numpy as jnp
@@ -372,6 +385,131 @@ def bench_sweep(n: int = 400, m: int = 5000, max_q: int = 256,
     return rec
 
 
+def bench_data_sharded(n: int = 400, m: int = 5000, max_q: int = 256,
+                       seed: int = 0, reps: int = 3,
+                       shard_counts=(1, 2, 4)) -> dict:
+    """Per-round insert-matrix sweep under d-way data-axis sharding at fixed
+    GLOBAL m (core/sweeps ``data_shards``: each device contracts m/d rows,
+    one psum merges the count tables).
+
+    Two timings per d, because this container is a single CPU core:
+
+    * ``mesh_round_us`` — the real d-(virtual-)device program.  All d shards
+      still execute on one core, so this measures correctness-path overhead
+      (shard_map + psum), NOT the d-way speedup real hardware gets.
+    * ``per_device_round_us`` — a single-device sweep over the ceil(m/d)
+      LOCAL rows, everything else fixed: the per-device work the mesh
+      distributes, and the honest proxy for d-chip wall time (the psum'd
+      (W, Q, R) tables are m-independent and tiny next to the contraction).
+
+    ``per_round_speedup`` = per_device(d=1) / per_device(d), recorded for
+    d=4 as the headline ``per_round_speedup_at_d4``.
+    """
+    from repro.core.sweeps import pad_data_rows, sweep
+
+    rng = np.random.default_rng(seed)
+    arities = rng.integers(2, 4, size=n)
+    data = np.stack([rng.integers(0, a, size=m) for a in arities], 1)
+    r_max = int(arities.max())
+    adj = np.zeros((n, n), dtype=np.int8)
+    adj[1, 0] = adj[2, 0] = 1
+    dj = jnp.asarray(data.astype(np.int32))
+    aj = jnp.asarray(arities.astype(np.int32))
+    adjj = jnp.asarray(adj)
+    kw = dict(kind="insert", ess=10.0, max_q=max_q, r_max=r_max,
+              counts_impl="fused")
+
+    rec = {"n": n, "m_global": m, "max_q": max_q, "r_max": r_max,
+           "cpu_count": os.cpu_count(),
+           "note": ("single-core container: mesh_round_us times the real "
+                    "d-virtual-device psum program on one core (overhead "
+                    "check); per_device_round_us times the m/d-row local "
+                    "contraction each of d real chips would run — the "
+                    "honest wall-time proxy at fixed global m"),
+           "shards": {}}
+    base_us = None
+    for d in shard_counts:
+        entry = {}
+        if d <= len(jax.devices()):
+            entry["mesh_round_us"] = round(_time(
+                lambda a, _d=d: sweep(dj, aj, a, data_shards=_d, **kw),
+                adjj, reps=reps), 1)
+        # per-device work: the local shard's rows on ONE device, padded the
+        # same way the mesh pads them (sentinel rows are exact no-ops)
+        local = np.asarray(pad_data_rows(dj, r_max, d))[: -(-m // d)]
+        lj = jnp.asarray(local)
+        us = _time(lambda a, _l=lj: sweep(_l, aj, a, **kw), adjj, reps=reps)
+        entry["m_local"] = int(local.shape[0])
+        entry["per_device_round_us"] = round(us, 1)
+        if d == 1:
+            base_us = us
+        entry["per_round_speedup"] = round(base_us / us, 2)
+        rec["shards"][str(d)] = entry
+    rec["per_round_speedup_at_d4"] = (
+        rec["shards"]["4"]["per_round_speedup"] if "4" in rec["shards"]
+        else None)
+    return rec
+
+
+def bench_family_cache(n: int = 120, m: int = 2000, k: int = 4,
+                       seed: int = 0) -> dict:
+    """Persistent family-score cache (core/score_cache) on an end-to-end
+    cGES run: hit rate, score evaluations saved, per-round wall speedup,
+    and the trajectory-identity check (cached adj/score must equal the
+    uncached run bitwise — the cache's exact-key contract).
+    """
+    from repro.core import GESConfig, cges
+
+    rng = np.random.default_rng(seed)
+    arities = rng.integers(2, 4, size=n).astype(np.int32)
+    data = np.stack([rng.integers(0, a, size=m) for a in arities],
+                    1).astype(np.int32)
+    base = dict(max_q=256, counts_impl="fused")
+    r0 = cges(data, arities, k=k, limit=True,
+              config=GESConfig(**base, family_cache=False))
+    # Capacity sized to the run's working set: the uncached baseline's
+    # host-dict ScoreCache is unbounded, so an under-provisioned device
+    # cache would charge eviction-induced recomputes to the cache itself.
+    r1 = cges(data, arities, k=k, limit=True,
+              config=GESConfig(**base, family_cache=True,
+                               cache_capacity=8192))
+    st = r1.family_cache_stats or {}
+    return {
+        "n": n, "m": m, "k": k, "engine": "host",
+        "hit_rate": round(st.get("hit_rate", 0.0), 4),
+        "hits": st.get("hits", 0), "misses": st.get("misses", 0),
+        # every hit is one whole column sweep (an O(m) contraction over
+        # all candidates of that child) the engine did not run
+        "column_sweeps_skipped": st.get("hits", 0),
+        "evals_uncached": r0.n_score_evals,
+        "evals_cached": r1.n_score_evals,
+        "rounds": r1.rounds,
+        "uncached_round_s": round(r0.wall_time_s / max(r0.rounds, 1), 3),
+        "cached_round_s": round(r1.wall_time_s / max(r1.rounds, 1), 3),
+        "per_round_speedup": round(
+            (r0.wall_time_s / max(r0.rounds, 1))
+            / (r1.wall_time_s / max(r1.rounds, 1)), 2),
+        "trajectory_identical": bool(
+            np.array_equal(r0.adj, r1.adj) and r0.score == r1.score),
+    }
+
+
+def _repo_metadata() -> dict:
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=os.path.dirname(
+                os.path.abspath(__file__))).stdout.strip() or None
+    except OSError:
+        commit = None
+    return {"platform": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "device_count": len(jax.devices()),
+            "cpu_count": os.cpu_count(),
+            "commit": commit,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep-json", default=None,
@@ -384,6 +522,10 @@ def main():
         print(f"{name},{us:.0f},{derived}")
     if args.sweep_json:
         rec = bench_sweep(n=args.sweep_n, m=args.sweep_m)
+        rec["meta"] = _repo_metadata()
+        rec["data_sharded"] = bench_data_sharded(n=args.sweep_n,
+                                                 m=args.sweep_m)
+        rec["family_cache"] = bench_family_cache()
         with open(args.sweep_json, "w") as f:
             json.dump(rec, f, indent=2)
             f.write("\n")
@@ -418,6 +560,18 @@ def main():
               f"prerefactor={fu.get('legacy_jit_us', 0):.0f}us "
               f"speedup={fu.get('speedup_jit_vs_prerefactor', 0)}x "
               f"fusion/sweep_round={fu['fusion_over_sweep_round']}")
+        ds = rec["data_sharded"]
+        print(f"bdeu_sweep/data_sharded,"
+              f"{ds['shards']['4']['per_device_round_us']:.0f},"
+              f"per-device round at d=4 (m/d rows); "
+              f"per_round_speedup_at_d4={ds['per_round_speedup_at_d4']}x "
+              f"mesh_d4={ds['shards']['4'].get('mesh_round_us', 0):.0f}us")
+        fc = rec["family_cache"]
+        print(f"cges/family_cache,{fc['cached_round_s'] * 1e6:.0f},"
+              f"hit_rate={fc['hit_rate']} "
+              f"column_sweeps_skipped={fc['column_sweeps_skipped']} "
+              f"per_round_speedup={fc['per_round_speedup']}x "
+              f"identical={fc['trajectory_identical']}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,29 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+
+def _peek_data_shards(argv):
+    for i, a in enumerate(argv):
+        if a == "--data-shards" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--data-shards="):
+            return int(a.split("=", 1)[1])
+    return 1
+
+
+# --data-shards d runs every sweep on a d-device data-axis mesh
+# (core/sweeps): XLA_FLAGS must be set before the backend initializes,
+# which importing repro.core below does — hence this pre-import argv peek.
+_d = _peek_data_shards(sys.argv[1:])
+if _d > 1 and "host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_d}").strip()
 
 import numpy as np
 
@@ -46,13 +68,14 @@ def run_algo(name: str, data, arities, config) -> dict:
                 wall_s=time.perf_counter() - t0, **extra)
 
 
-def bench(families, scale: float, m: int, seeds, algos=ALGOS, verbose=True):
+def bench(families, scale: float, m: int, seeds, algos=ALGOS, verbose=True,
+          data_shards: int = 1):
     rows = []
     for fam in families:
         for seed in seeds:
             bn = benchmark_bn(fam, scale=scale, seed=seed)
             data = forward_sample(bn, m, np.random.default_rng(seed + 100))
-            config = GESConfig(max_q=1024)
+            config = GESConfig(max_q=1024, data_shards=data_shards)
             for algo in algos:
                 r = run_algo(algo, data, bn.arities, config)
                 row = {
@@ -103,10 +126,17 @@ def main():
     ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--families", nargs="+",
                     default=["pigs_like", "link_like", "munin_like"])
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="shard every sweep's instance axis over this many "
+                         "(forced-host) devices with psum'd count tables — "
+                         "table-identical results, per-device HBM traffic "
+                         "and contraction flops scale by 1/d (see "
+                         "repro.launch.roofline.sweep_data_axis_terms)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    rows = bench(args.families, args.scale, args.m, list(range(args.seeds)))
+    rows = bench(args.families, args.scale, args.m, list(range(args.seeds)),
+                 data_shards=args.data_shards)
     summary = summarize(rows)
     print("\n=== Table 2 summary (means over seeds) ===")
     print(f"{'family':12s} {'algo':9s} {'BDeu/m':>10s} {'SMHD':>7s} "

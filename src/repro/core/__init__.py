@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: cGES, ring-distributed structural
 learning of Bayesian networks with GES guarantees."""
-from .ges import GESConfig, GESResult, ScoreCache, ges_host, ges_jit
+from .ges import (DeviceFamilyCache, GESConfig, GESResult, ScoreCache,
+                  device_data, ges_host, ges_jit)
 from .fges import fges_host
 from .cges import CGESResult, cges, edge_add_limit
 from .partition import (partition_edges, variable_clusters, edge_subsets,
@@ -8,5 +9,6 @@ from .partition import (partition_edges, variable_clusters, edge_subsets,
 from .fusion import (fuse, fuse_trace, fusion_edge_union, sigma_consistent,
                      gho_order, check_fusion_engine, resolve_fusion_engine)
 from .ring import RingSpec, ring_cges, build_ring_program, fuse_jit
-from .sweeps import sweep
-from . import bdeu, dag, metrics, sweeps
+from .score_cache import FamilyScoreCache
+from .sweeps import pad_data_rows, sweep
+from . import bdeu, dag, metrics, score_cache, sweeps

@@ -191,12 +191,32 @@ def _bdeu_from_counts(counts: Array, q, r, ess: float) -> Array:
     return term_j.sum(-1) + term_jk.sum((-2, -1))
 
 
+def _psum_counts(counts: Array, data_axis_name: str | None) -> Array:
+    """Contingency tables are additive over instances: when the m axis is
+    sharded over ``data_axis_name`` each device builds its partial table and
+    ONE psum reconstructs the global counts — placed here, before the
+    (m-independent) BDeu reduction, so the reduction itself never needs to
+    know about the mesh."""
+    if data_axis_name is None:
+        return counts
+    return jax.lax.psum(counts, data_axis_name)
+
+
 def _dense_counts_segment(cfg: Array, child_col: Array, r_max: int, max_q: int) -> Array:
-    """(max_q, r_max) contingency table via segment-sum (CPU/debug path)."""
-    flat = jnp.clip(cfg, 0, max_q - 1) * r_max + child_col
+    """(max_q, r_max) contingency table via segment-sum (CPU/debug path).
+
+    Out-of-range child values (the data-axis sharder pads ragged m with
+    sentinel rows of value r_max, out of range for every variable) are routed
+    to an explicit overflow segment and sliced off — same OOB-drop idiom as
+    ``kernels/bdeu_sweep/ref.py``; bitwise-identical for in-range rows.
+    """
+    ok = (child_col >= 0) & (child_col < r_max)
+    flat = jnp.where(ok, jnp.clip(cfg, 0, max_q - 1) * r_max + child_col,
+                     max_q * r_max)
     counts = jax.ops.segment_sum(
-        jnp.ones_like(flat, dtype=jnp.float32), flat, num_segments=max_q * r_max
-    )
+        jnp.ones_like(flat, dtype=jnp.float32), flat,
+        num_segments=max_q * r_max + 1
+    )[: max_q * r_max]
     return counts.reshape(max_q, r_max)
 
 
@@ -206,6 +226,8 @@ def _dense_counts_onehot(cfg: Array, child_col: Array, r_max: int, max_q: int) -
     counts = OH(cfg)^T @ OH(child):  (max_q, m) @ (m, r_max).  Exact for
     m <= 2^24 in f32.  This is the TPU-native replacement for GPU scatter-add;
     the Pallas kernel in repro/kernels/bdeu_count tiles the same contraction.
+    (Sentinel rows with child = r_max one-hot to the zero row — counting-
+    neutral without any explicit guard.)
     """
     cfg = jnp.clip(cfg, 0, max_q - 1)
     oh_cfg = jax.nn.one_hot(cfg, max_q, dtype=jnp.float32)
@@ -287,9 +309,16 @@ def _sweep_counts_segment(cfg0: Array, child_col: Array, oh_all: Array,
     counts[b, j0, x*r_max + a] = #(child=b, cfg0=j0, X_x=a).  The jnp
     reference for the bdeu_sweep Pallas kernel; ``oh_all`` is the
     (m, n*r_max) data one-hot from :func:`_onehot_all`.
+
+    Sentinel rows (child = r_max, from the data-axis sharder's ragged-m
+    padding) are routed to an explicit overflow segment and sliced off —
+    bitwise-identical routing for in-range rows.
     """
-    idx = child_col * max_q + jnp.clip(cfg0, 0, max_q - 1)
-    counts = jax.ops.segment_sum(oh_all, idx, num_segments=r_max * max_q)
+    ok = (child_col >= 0) & (child_col < r_max)
+    idx = jnp.where(ok, child_col * max_q + jnp.clip(cfg0, 0, max_q - 1),
+                    r_max * max_q)
+    counts = jax.ops.segment_sum(
+        oh_all, idx, num_segments=r_max * max_q + 1)[: r_max * max_q]
     return counts.reshape(r_max, max_q, oh_all.shape[1])
 
 
@@ -304,6 +333,7 @@ def fused_insert_scores(
     counts_impl: str = "fused",
     oh_all: Array | None = None,
     pids: Array | None = None,
+    data_axis_name: str | None = None,
 ) -> Array:
     """(n,) BDeu scores of ALL candidate families (Pa + {x}) for one child.
 
@@ -323,7 +353,13 @@ def fused_insert_scores(
 
     ``oh_all``: optional pre-built :func:`_onehot_all` of ``data`` — full
     sweeps pass it so the child-independent one-hot is built once, not once
-    per mapped child (ignored when ``pids`` is given).
+    per mapped child.  With ``pids`` the W candidate one-hot blocks are
+    gathered out of it (a gather of a one-hot IS the one-hot of the gather,
+    so this is exact), sparing the per-column rebuild on the restricted path.
+
+    ``data_axis_name``: instance axis sharded over that mesh axis — each
+    device contracts its m/d shard; one psum rebuilds the global joint
+    counts before the (m-independent) BDeu reduction below.
     """
     cfg0, q0 = _slot_encode(data, arities, parent_mask)
     child_col = jnp.take(data, child, axis=1)
@@ -338,14 +374,21 @@ def fused_insert_scores(
         from ..kernels.bdeu_sweep import sweep_counts, sweep_counts_restricted
         if pids is None:
             counts = sweep_counts(cfg0c, child_col, data,
-                                  max_q=max_q, r_max=r_max)
+                                  max_q=max_q, r_max=r_max,
+                                  data_axis_name=data_axis_name)
         else:
             counts = sweep_counts_restricted(cfg0c, child_col, data, pids,
-                                             max_q=max_q, r_max=r_max)
+                                             max_q=max_q, r_max=r_max,
+                                             data_axis_name=data_axis_name)
     else:
-        if oh_all is None or pids is not None:
+        if oh_all is not None and pids is not None:
+            cols = (pids[:, None] * r_max
+                    + jnp.arange(r_max, dtype=pids.dtype)[None, :]).reshape(-1)
+            oh_all = jnp.take(oh_all, cols, axis=1)
+        elif oh_all is None:
             oh_all = _onehot_all(data_c, r_max)
         counts = _sweep_counts_segment(cfg0c, child_col, oh_all, max_q, r_max)
+        counts = _psum_counts(counts, data_axis_name)
     # (b, j0, x, a) -> per-candidate tables (x, (j0, a), b)
     c4 = counts.reshape(r_max, max_q, w, r_max)
     slab = c4.transpose(2, 1, 3, 0).reshape(w, max_q * r_max, r_max)
@@ -368,6 +411,7 @@ def fused_delete_scores(
     r_max: int,
     counts_impl: str = "fused",
     pids: Array | None = None,
+    data_axis_name: str | None = None,
 ) -> Array:
     """(n,) BDeu scores of ALL candidate families (Pa - {x}) for one child,
     from ONE family-table build.
@@ -412,6 +456,13 @@ def fused_delete_scores(
     marginalization, exactly this function's jnp no-op convention), and
     overflow-guarded families (q0 > max_q) only need the +/-inf *pattern*
     below, which the shared guard supplies.
+
+    ``data_axis_name``: instance axis sharded over that mesh axis.  The VMEM
+    kernel reduces counts to *scores* in-register and scores are not additive
+    over shards, so under data sharding ``"fused_pallas"`` routes to the
+    two-step path (table build via the psum-able ``contingency_counts``
+    wrapper + jnp marginalization) — the kernel's own per-shard accumulation
+    stays untouched.
     """
     n = data.shape[1]
     cfg0, q0 = _slot_encode(data, arities, parent_mask)
@@ -429,7 +480,7 @@ def fused_delete_scores(
         low = jnp.take(low_full, pids)
     w = slot_ar.shape[0]
 
-    if counts_impl == "fused_pallas":
+    if counts_impl == "fused_pallas" and data_axis_name is None:
         from ..kernels.bdeu_sweep import delete_scores
 
         n_slots = max(1, min(n, max(int(max_q).bit_length() - 1, 1)))
@@ -458,12 +509,15 @@ def fused_delete_scores(
         impl = single_impl(counts_impl)
         if impl == "onehot":
             counts0 = _dense_counts_onehot(cfg0c, child_col, r_max, max_q)
+            counts0 = _psum_counts(counts0, data_axis_name)
         elif impl == "pallas":
             from ..kernels.bdeu_count import contingency_counts
             counts0 = contingency_counts(cfg0c, child_col,
-                                         max_q=max_q, r_max=r_max)
+                                         max_q=max_q, r_max=r_max,
+                                         data_axis_name=data_axis_name)
         else:
             counts0 = _dense_counts_segment(cfg0c, child_col, r_max, max_q)
+            counts0 = _psum_counts(counts0, data_axis_name)
 
         j0 = jnp.arange(max_q, dtype=jnp.int32)[None, :]             # (1, Q)
         low_c = low[:, None]
@@ -496,6 +550,7 @@ def loop_insert_scores(
     r_max: int,
     counts_impl: str = "segment",
     pids: Array | None = None,
+    data_axis_name: str | None = None,
 ) -> Array:
     """Loop-engine insert sweep with INCREMENTAL config encoding: scores of
     the candidate families (Pa + {x}) for one child, one contingency-table
@@ -517,6 +572,10 @@ def loop_insert_scores(
     scored and the return shape is (W,).  Entries at x == child or x already
     in Pa are scored with the duplicated slot (garbage by convention, masked
     by callers); candidates whose extended family overflows max_q are -inf.
+
+    ``data_axis_name``: instance axis sharded — each per-candidate table is
+    psum'd over the mesh axis before its reduction (the vmap batches all W
+    psums into one collective).
     """
     impl = single_impl(counts_impl)
     cfg0, q0 = _slot_encode(data, arities, parent_mask)
@@ -535,12 +594,15 @@ def loop_insert_scores(
         cfgc = jnp.clip(cfg, 0, max_q - 1)
         if impl == "onehot":
             counts = _dense_counts_onehot(cfgc, child_col, r_max, max_q)
+            counts = _psum_counts(counts, data_axis_name)
         elif impl == "pallas":
             from ..kernels.bdeu_count import contingency_counts
             counts = contingency_counts(cfgc, child_col,
-                                        max_q=max_q, r_max=r_max)
+                                        max_q=max_q, r_max=r_max,
+                                        data_axis_name=data_axis_name)
         else:
             counts = _dense_counts_segment(cfgc, child_col, r_max, max_q)
+            counts = _psum_counts(counts, data_axis_name)
         score = _bdeu_from_counts(counts, q, r, ess)
         ok = (log_q0 + jnp.log(arities[x].astype(jnp.float32))) <= log_max
         return jnp.where(ok, score, -jnp.inf)
@@ -557,19 +619,27 @@ def local_score_masked(
     max_q: int,
     r_max: int,
     counts_impl: str = "segment",
+    data_axis_name: str | None = None,
 ) -> Array:
-    """Jit-safe BDeu local score: child (scalar int), parent_mask (n,) bool."""
+    """Jit-safe BDeu local score: child (scalar int), parent_mask (n,) bool.
+
+    ``data_axis_name``: instance axis sharded — the family table is psum'd
+    over that mesh axis before the (m-independent) reduction.
+    """
     counts_impl = single_impl(counts_impl)
     cfg, q = _slot_encode(data, arities, parent_mask)
     child_col = jnp.take(data, child, axis=1)
     if counts_impl == "onehot":
         counts = _dense_counts_onehot(cfg, child_col, r_max, max_q)
+        counts = _psum_counts(counts, data_axis_name)
     elif counts_impl == "pallas":
         from ..kernels.bdeu_count import contingency_counts
         counts = contingency_counts(
-            jnp.clip(cfg, 0, max_q - 1), child_col, max_q=max_q, r_max=r_max)
+            jnp.clip(cfg, 0, max_q - 1), child_col, max_q=max_q, r_max=r_max,
+            data_axis_name=data_axis_name)
     else:
         counts = _dense_counts_segment(cfg, child_col, r_max, max_q)
+        counts = _psum_counts(counts, data_axis_name)
     r = arities[child]
     score = _bdeu_from_counts(counts, q, r, ess)
     # Dense-table overflow guard: if the true q exceeds the static table bound
@@ -589,10 +659,12 @@ def family_scores_batch(
     max_q: int,
     r_max: int,
     counts_impl: str = "segment",
+    data_axis_name: str | None = None,
 ) -> Array:
     """vmapped local scores for a batch of (child, parent_mask) families."""
     fn = lambda c, pm: local_score_masked(
-        data, arities, c, pm, ess, max_q, r_max, counts_impl
+        data, arities, c, pm, ess, max_q, r_max, counts_impl,
+        data_axis_name=data_axis_name
     )
     return jax.vmap(fn)(children, parent_masks)
 
@@ -605,13 +677,15 @@ def graph_score_jax(
     max_q: int,
     r_max: int,
     counts_impl: str = "segment",
+    data_axis_name: str | None = None,
 ) -> Array:
     """Total BDeu of a DAG (jit-safe): sum of all n local scores."""
     n = adj.shape[0]
     children = jnp.arange(n, dtype=jnp.int32)
     masks = adj.astype(bool).T  # row y of masks = parents of y
     scores = family_scores_batch(
-        data, arities, children, masks, ess, max_q, r_max, counts_impl
+        data, arities, children, masks, ess, max_q, r_max, counts_impl,
+        data_axis_name=data_axis_name
     )
     return scores.sum()
 
@@ -622,7 +696,8 @@ def graph_score_jax(
 
 def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
                  child_chunk, insert: bool,
-                 axis_name=None, axis_size: int = 1):
+                 axis_name=None, axis_size: int = 1,
+                 data_axis_name=None):
     """Shared implementation of insert/delete delta matrices.
 
     The (n^2) candidate sweep would naively materialize (n, n, m) config
@@ -634,6 +709,11 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
     axis (the paper's "inner calculations in parallel" as scoring-TP): each
     device scores n/axis_size children, then an all-gather reassembles the
     (n, n) delta matrix.
+
+    ``data_axis_name``: ORTHOGONAL second mesh axis sharding the instance
+    (m) axis — each device contracts its m/d one-hot shard and the count
+    tables are psum'd before every BDeu reduction.  Composes freely with the
+    scoring-TP child split above (2-D mesh: children x instances).
     """
     n = adj.shape[0]
     children = jnp.arange(n, dtype=jnp.int32)
@@ -651,7 +731,7 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
         y, pm, b = args
         return fused_insert_scores(
             data, arities, y, pm, ess, max_q, r_max, counts_impl,
-            oh_all=oh_all) - b
+            oh_all=oh_all, data_axis_name=data_axis_name) - b
 
     def per_child_insert_loop(args):
         """Insert sweep via the ONE loop-engine primitive
@@ -660,7 +740,8 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
         sweeps so full-n and restricted programs agree bitwise."""
         y, pm, b = args
         return loop_insert_scores(
-            data, arities, y, pm, ess, max_q, r_max, counts_impl) - b
+            data, arities, y, pm, ess, max_q, r_max, counts_impl,
+            data_axis_name=data_axis_name) - b
 
     def per_child_delete_fused(args):
         """Fused delete sweep: ONE family-table build per child; every
@@ -668,7 +749,8 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
         (see fused_delete_scores) — zero re-counting for the whole column."""
         y, pm, b = args
         return fused_delete_scores(
-            data, arities, y, pm, ess, max_q, r_max, counts_impl) - b
+            data, arities, y, pm, ess, max_q, r_max, counts_impl,
+            data_axis_name=data_axis_name) - b
 
     def per_child_delete(args):
         y, pm, b = args
@@ -676,7 +758,8 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
         def per_parent(x):
             new_pm = pm.at[x].set(False)
             return local_score_masked(
-                data, arities, y, new_pm, ess, max_q, r_max, counts_impl
+                data, arities, y, new_pm, ess, max_q, r_max, counts_impl,
+                data_axis_name=data_axis_name
             )
         return jax.vmap(per_parent)(jnp.arange(n, dtype=jnp.int32)) - b
 
@@ -699,7 +782,8 @@ def _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
 
     def base_for(ch, masks):
         return family_scores_batch(
-            data, arities, ch, masks, ess, max_q, r_max, counts_impl)
+            data, arities, ch, masks, ess, max_q, r_max, counts_impl,
+            data_axis_name=data_axis_name)
 
     if axis_name is not None:
         per = -(-n // axis_size)                    # children per device
@@ -734,6 +818,7 @@ def insert_deltas(
     child_chunk: int | None = None,
     axis_name=None,
     axis_size: int = 1,
+    data_axis_name=None,
 ) -> Array:
     """Delta matrix D[x, y] = score(y, Pa_y + {x}) - score(y, Pa_y) for all pairs.
 
@@ -743,7 +828,8 @@ def insert_deltas(
     """
     return _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
                         child_chunk, insert=True,
-                        axis_name=axis_name, axis_size=axis_size)
+                        axis_name=axis_name, axis_size=axis_size,
+                        data_axis_name=data_axis_name)
 
 
 def delete_deltas(
@@ -757,6 +843,7 @@ def delete_deltas(
     child_chunk: int | None = None,
     axis_name=None,
     axis_size: int = 1,
+    data_axis_name=None,
 ) -> Array:
     """Delta matrix D[x, y] = score(y, Pa_y - {x}) - score(y, Pa_y).
 
@@ -765,7 +852,8 @@ def delete_deltas(
     """
     return _deltas_impl(data, arities, adj, ess, max_q, r_max, counts_impl,
                         child_chunk, insert=False,
-                        axis_name=axis_name, axis_size=axis_size)
+                        axis_name=axis_name, axis_size=axis_size,
+                        data_axis_name=data_axis_name)
 
 
 def pairwise_similarity_jax(

@@ -50,7 +50,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import bdeu, fusion, partition
-from .ges import GESConfig, GESResult, ScoreCache, ges_host, ges_jit
+from .ges import (DeviceFamilyCache, GESConfig, GESResult, ScoreCache,
+                  ges_host, ges_jit)
 
 
 @dataclasses.dataclass
@@ -67,6 +68,10 @@ class CGESResult:
     # (this container is 1-core, so the k processes run serially here; the
     # paper's Table 2c numbers are 8-thread wall times.)
     parallel_wall_s: float = 0.0
+    # hits/misses/hit_rate of the persistent family-score cache, when
+    # config.family_cache was on (host engine: the shared DeviceFamilyCache;
+    # jax engine: summed per-member cache counters); None otherwise.
+    family_cache_stats: Optional[dict] = None
 
 
 def edge_add_limit(n: int, k: int) -> int:
@@ -114,6 +119,14 @@ def cges(
     # the paper's shared 'concurrent safe data structure': one score cache
     # shared by every ring process across every round
     cache = ScoreCache()
+    # Persistent device-resident family-score caches (config.family_cache):
+    # the host engine shares ONE DeviceFamilyCache handle across all k
+    # processes, every round AND the fine-tune (full-n scattered columns,
+    # scope-worded); the jax engine keeps one per-process cache pytree whose
+    # warmed state is fed back into the next round's ges_jit call.
+    dev_cache = (DeviceFamilyCache(n, config.cache_capacity)
+                 if (config.family_cache and engine == "host") else None)
+    jax_caches: List = [None] * k
 
     data_j = jnp.asarray(data.astype(np.int32))
     ar_j = jnp.asarray(arities.astype(np.int32))
@@ -140,11 +153,16 @@ def cges(
                 init = fusion.fusion_edge_union(
                     graphs[i], pred, engine=fusion_engine).astype(np.int8)
             if engine == "jax":
-                adj_i, score_i, n_ins, n_del = ges_jit(
+                out = ges_jit(
                     data_j, ar_j, jnp.asarray(init),
                     jnp.asarray(edge_masks[i].astype(np.int8)),
                     add_limit=add_limit, config=config, r_max=r_max,
-                    pid_table=pid_j[i])
+                    pid_table=pid_j[i], cache=jax_caches[i],
+                    return_cache=config.family_cache)
+                if config.family_cache:
+                    adj_i, score_i, n_ins, n_del, jax_caches[i] = out
+                else:
+                    adj_i, score_i, n_ins, n_del = out
                 adj_i = np.asarray(adj_i)
                 score_i = float(score_i)
                 W = int(pid_j.shape[2])
@@ -152,7 +170,8 @@ def cges(
             else:
                 res = ges_host(data, arities, init_adj=init,
                                allowed=edge_masks[i], add_limit=add_limit,
-                               config=config, cache=cache)
+                               config=config, cache=cache,
+                               family_cache=dev_cache)
                 adj_i, score_i = res.adj, res.score
                 evals += res.n_score_evals
             new_graphs.append(adj_i)
@@ -184,14 +203,23 @@ def cges(
         evals += n * n + n * (int(n_ins) + int(n_del))
     else:
         res = ges_host(data, arities, init_adj=best_adj, allowed=None,
-                       add_limit=None, config=config, cache=cache)
+                       add_limit=None, config=config, cache=cache,
+                       family_cache=dev_cache)
         final_adj, final_score = res.adj, res.score
         evals += res.n_score_evals
 
     parallel_wall += time.perf_counter() - t_ft       # fine-tune is serial
+    fc_stats = None
+    if dev_cache is not None:
+        fc_stats = dev_cache.stats()
+    elif config.family_cache and engine == "jax":
+        hits = sum(int(c.hits) for c in jax_caches if c is not None)
+        misses = sum(int(c.misses) for c in jax_caches if c is not None)
+        fc_stats = {"hits": hits, "misses": misses,
+                    "hit_rate": hits / max(hits + misses, 1)}
     return CGESResult(
         adj=final_adj, score=final_score, rounds=rounds,
         n_score_evals=evals, wall_time_s=time.perf_counter() - t0,
         ring_scores=ring_scores, edge_masks=edge_masks,
-        parallel_wall_s=parallel_wall,
+        parallel_wall_s=parallel_wall, family_cache_stats=fc_stats,
     )

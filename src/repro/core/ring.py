@@ -48,28 +48,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.6: public top-level export
-    from jax import shard_map as _shard_map
-except ImportError:  # pinned jax 0.4.x: experimental namespace
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-
-def _shard_map_compat(f, *, mesh, in_specs, out_specs):
-    """shard_map across the jax 0.4 -> 0.6 API rename.
-
-    The replication-checker kwarg was renamed ``check_rep`` -> ``check_vma``;
-    we disable it either way (the ring body mixes per-device graph state with
-    replicated data, which the checker mis-flags on older jax).
-    """
-    try:
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-    except TypeError:
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_rep=False)
-
-from . import partition
+from . import partition, score_cache
 from .ges import GESConfig, ges_jit_body
+# One shard_map compat shim for the whole codebase (jax 0.4 check_rep ->
+# 0.6 check_vma rename) lives in core/sweeps; the underscore alias keeps
+# pre-unification importers of this module working.
+from .sweeps import pad_data_rows, shard_map_compat
+
+_shard_map_compat = shard_map_compat
 # Fusion lives in ONE place (core/fusion.py); the compat names below are
 # re-exported because pre-unification callers imported them from here.
 from .fusion import (fuse_trace, fuse_jit, gho_order_jit,  # noqa: F401
@@ -90,6 +76,8 @@ class RingSpec:
     max_rounds: int = 16
     axis_model: Optional[str] = None   # optional scoring-TP axis inside each
     axis_model_size: int = 1           # ring process (production mesh: 'model')
+    data_axis: Optional[str] = None    # optional instance-axis mesh dim: each
+    data_axis_size: int = 1            # device scores its m/d rows + one psum
 
 
 def _ring_body(data, arities, edge_mask, init_g, pid_table=None,
@@ -97,20 +85,30 @@ def _ring_body(data, arities, edge_mask, init_g, pid_table=None,
                add_limit: int):
     """Per-device body under shard_map.  edge_mask/init_g: (1, n, n) local;
     pid_table: optional (1, n, W) local — this process's static E_i candidate
-    table, making every sweep of every round W-wide (see ges_jit_body)."""
+    table, making every sweep of every round W-wide (see ges_jit_body).
+
+    When ``spec.data_axis`` is set, ``data`` arrives as the local (m/d, n)
+    row shard and every count build inside ges_jit_body psums over that
+    axis (see core/sweeps).  When ``config.family_cache`` is set, a
+    per-ring-process family-score cache is threaded through the rounds
+    while_loop, so a family scored in round t (or inherited from a
+    predecessor's graph) is never recontracted in round t' > t; the body
+    then also returns the final (hits, misses) counters.
+    """
     axis = spec.axis
     k = spec.k
-    n = data.shape[1]
+    n = init_g.shape[1]
     edge_mask = edge_mask[0]
     g0 = init_g[0]
     pids = None if pid_table is None else pid_table[0]
 
     perm = [(i, (i + 1) % k) for i in range(k)]  # send to successor
+    use_cache = bool(config.family_cache)
 
-    def one_round(g_own):
+    def one_round(g_own, cache):
         g_pred = jax.lax.ppermute(g_own, axis, perm)
         fused = fuse_trace(g_own, g_pred)
-        adj, score, n_ins, n_del = ges_jit_body(
+        out = ges_jit_body(
             data, arities, fused, edge_mask,
             jnp.int32(add_limit),
             config.ess, config.max_parents, config.max_q, r_max,
@@ -118,16 +116,23 @@ def _ring_body(data, arities, edge_mask, init_g, pid_table=None,
             config.child_chunk,
             axis_model=spec.axis_model,
             axis_model_size=spec.axis_model_size,
-            pid_table=pids)
-        return adj, score
+            pid_table=pids,
+            data_axis_name=spec.data_axis,
+            cache=cache)
+        if use_cache:
+            adj, score, _, _, cache = out
+        else:
+            adj, score = out[0], out[1]
+        return adj, score, cache
 
     def cond(state):
-        g, g_best, s_best, best, go, rnd = state
+        go, rnd = state[4], state[5]
         return go & (rnd < spec.max_rounds)
 
     def body(state):
-        g, g_best, s_best, best, go, rnd = state
-        adj, score = one_round(g)
+        g, g_best, s_best, best, go, rnd = state[:6]
+        cache = state[6] if use_cache else None
+        adj, score, cache = one_round(g, cache)
         round_best = jax.lax.pmax(score, axis)
         improved = round_best > best + config.tol
         # Keep the graphs of the last GLOBALLY-improving round (Algorithm 1
@@ -136,11 +141,20 @@ def _ring_body(data, arities, edge_mask, init_g, pid_table=None,
         # engines hand the same winner to the fine-tune pass.
         g_keep = jnp.where(improved, adj, g_best)
         s_keep = jnp.where(improved, score, s_best)
-        return (adj, g_keep, s_keep, jnp.maximum(best, round_best),
-                improved, rnd + 1)
+        out = (adj, g_keep, s_keep, jnp.maximum(best, round_best),
+               improved, rnd + 1)
+        return out + (cache,) if use_cache else out
 
     state0 = (g0, g0, -BIG, -BIG, jnp.bool_(True), jnp.int32(0))
-    _, g_best, s_best, _, _, rounds = jax.lax.while_loop(cond, body, state0)
+    if use_cache:
+        width = n if pids is None else pids.shape[1]
+        state0 = state0 + (score_cache.init(n, width, config.cache_capacity),)
+    out = jax.lax.while_loop(cond, body, state0)
+    g_best, s_best, rounds = out[1], out[2], out[5]
+    if use_cache:
+        cache = out[6]
+        hm = jnp.stack([cache.hits, cache.misses])[None]   # (1, 2) per device
+        return g_best[None], s_best[None], rounds, hm
     return g_best[None], s_best[None], rounds
 
 
@@ -154,18 +168,27 @@ def build_ring_program(mesh: Mesh, spec: RingSpec, config: GESConfig,
     with ``restricted=True`` the program takes a fifth (k, n, W) int32
     ``pid_tables`` input (partition.pid_tables — one shared static W) and
     every ring process sweeps W-wide instead of full-n-then-mask.
+
+    With ``spec.data_axis`` set (a SECOND mesh axis, orthogonal to the
+    ring), the data rows are sharded ``P(data_axis, None)`` so each of the
+    k * d devices contracts m/d instances and psums the count tables; the
+    caller owns sentinel-padding ragged m (sweeps.pad_data_rows — ring_cges
+    does it).  With ``config.family_cache`` the program returns a fourth
+    (k, 2) int32 output: per-ring-process (hits, misses) cache counters.
     """
     axis = spec.axis
 
     body = partial(_ring_body, spec=spec, config=config, r_max=r_max,
                    add_limit=add_limit)
 
+    data_spec = P() if spec.data_axis is None else P(spec.data_axis, None)
     pid_specs = (P(axis, None, None),) if restricted else ()
+    stat_specs = (P(axis, None),) if config.family_cache else ()
     mapped = _shard_map_compat(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None, None), P(axis, None, None))
+        in_specs=(data_spec, P(), P(axis, None, None), P(axis, None, None))
         + pid_specs,
-        out_specs=(P(axis, None, None), P(axis), P()),
+        out_specs=(P(axis, None, None), P(axis), P()) + stat_specs,
     )
     return jax.jit(mapped)
 
@@ -180,6 +203,7 @@ def ring_cges(
     add_limit: Optional[int] = None,
     restricted: bool = True,
     pid_tables: Optional[np.ndarray] = None,
+    return_cache_stats: bool = False,
 ):
     """Execute the compiled ring on a real mesh (k devices).
 
@@ -192,6 +216,12 @@ def ring_cges(
     the edge masks (or takes them via ``pid_tables``) so each compiled
     process pays W = |E_i|-wide sweeps; ``restricted=False`` runs the old
     full-n-masked program (same trajectories, n-wide per-round cost).
+
+    ``spec.data_axis`` shards the instance axis across a second mesh dim
+    (rows are sentinel-padded here when m % d != 0 — exact, see
+    sweeps.pad_data_rows).  ``return_cache_stats=True`` (requires
+    ``config.family_cache``) appends a list of per-process stats dicts
+    (hits / misses / hit_rate) to the return tuple.
     """
     k, n, _ = edge_masks.shape
     assert k == spec.k
@@ -200,6 +230,10 @@ def ring_cges(
     lim = int(n * n if add_limit is None else add_limit)
     prog = build_ring_program(mesh, spec, config, r_max, lim,
                               restricted=restricted)
+    data = np.asarray(data)
+    if spec.data_axis is not None and spec.data_axis_size > 1:
+        data = np.asarray(pad_data_rows(data.astype(np.int32), r_max,
+                                        spec.data_axis_size))
     graphs0 = jnp.zeros((k, n, n), dtype=jnp.int8)
     args = [
         jnp.asarray(data.astype(np.int32)),
@@ -211,5 +245,14 @@ def ring_cges(
         if pid_tables is None:
             pid_tables = partition.pid_tables(edge_masks)
         args.append(jnp.asarray(np.asarray(pid_tables, dtype=np.int32)))
-    graphs, scores, rounds = prog(*args)
+    out = prog(*args)
+    graphs, scores, rounds = out[0], out[1], out[2]
+    if return_cache_stats:
+        if not config.family_cache:
+            raise ValueError("return_cache_stats requires config.family_cache")
+        hm = np.asarray(out[3])
+        stats = [{"hits": int(h), "misses": int(ms),
+                  "hit_rate": float(h) / max(int(h) + int(ms), 1)}
+                 for h, ms in hm]
+        return np.asarray(graphs), np.asarray(scores), int(rounds), stats
     return np.asarray(graphs), np.asarray(scores), int(rounds)

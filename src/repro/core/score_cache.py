@@ -1,0 +1,229 @@
+"""Persistent device-resident family-score cache for GES sweeps.
+
+Scutari et al. (arXiv:1804.08137) observe that greedy-search wall time is
+dominated by *redundant* family (child, parent-set) score evaluations, and
+the cGES ring makes the redundancy extreme: the same family recurs across
+GES iterations (most columns are untouched by an edge application), across
+ring rounds (graphs converge), and across ring members (edge subsets trade
+ownership of the same children).  This module memoises the unit both score
+engines actually produce — the masked candidate-score COLUMN of one
+(child, parent-set) family under one candidate set (a batch of family
+scores: entry x is the family score of Pa_y +/- {x} minus the base, masked
+to the legal toggles) — in a fixed-capacity, set-associative table that
+lives on device and is threaded through ``lax.while_loop`` carries, so a
+hit skips the whole O(m)-contraction sweep via ``lax.cond``.
+
+Key contract (exactness): a column is fully determined by
+``(kind, child, parents-of-child, scope)`` where ``scope`` identifies the
+candidate set / restriction program (ring members hash their allowed-edge
+column into it; full-n programs use 0).  Keys are stored EXACTLY —
+``2 + ceil(n/32)`` packed int32 words (kind/child word, scope word, parent
+bitmask) — and compared word-for-word, so there are no hash collisions to
+corrupt a trajectory: the set-index hash only picks WHERE a key lives, never
+WHETHER it matches.  Cached-vs-uncached trajectories are therefore
+bitwise-identical as long as the compute closure is deterministic.
+
+Eviction (in the spirit of prioritized experience replay): each slot carries
+``prio = access_step + GAIN_WEIGHT * sigmoid(max(column))`` — a recency
+ramp plus a bounded bonus for columns that still contain a positive score
+delta (families whose neighborhood can still improve the graph are the ones
+greedy search revisits).  The victim is the min-priority way of the key's
+set; empty slots sit at -inf priority so they fill first.
+
+Data-axis interplay: when sweeps shard the instance axis, every device on
+the data axis carries an identical replica of the cache state (the psum'd
+columns are identical, so the states evolve in lockstep) — hence the
+``lax.cond`` hit/miss predicate is replicated too and the psum inside the
+miss branch cannot deadlock.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WAYS = 4                 # set associativity
+GAIN_WEIGHT = 8.0        # max priority bonus, in units of access steps
+KIND_INSERT = 0
+KIND_DELETE = 1
+
+_FNV_OFFSET = jnp.uint32(2166136261)
+_FNV_PRIME = jnp.uint32(16777619)
+
+
+class FamilyScoreCache(NamedTuple):
+    """Device-resident cache state (a pytree — carries through while_loop).
+
+    keys: (C, KW) int32 — packed exact keys; word 0 == -1 marks empty.
+    vals: (C, V)  f32   — cached masked score columns (V = W or n, static).
+    prio: (C,)    f32   — eviction priority (-inf = empty).
+    step/hits/misses: () int32 — access counter + statistics.
+    """
+    keys: Array
+    vals: Array
+    prio: Array
+    step: Array
+    hits: Array
+    misses: Array
+
+
+def key_words(n_vars: int) -> int:
+    return 2 + (n_vars + 31) // 32
+
+
+def init(n_vars: int, width: int, capacity: int = 1024) -> FamilyScoreCache:
+    """Fresh cache for (n_vars)-variable problems with (width,) columns.
+
+    ``capacity`` is rounded up to a multiple of WAYS.
+    """
+    cap = max(int(capacity), WAYS)
+    cap = ((cap + WAYS - 1) // WAYS) * WAYS
+    return FamilyScoreCache(
+        keys=jnp.full((cap, key_words(n_vars)), -1, dtype=jnp.int32),
+        vals=jnp.zeros((cap, width), dtype=jnp.float32),
+        prio=jnp.full((cap,), -jnp.inf, dtype=jnp.float32),
+        step=jnp.int32(0),
+        hits=jnp.int32(0),
+        misses=jnp.int32(0),
+    )
+
+
+def _pack_key(kind_code, child, parent_mask: Array, scope) -> Array:
+    """Exact (KW,) int32 key: [child*4 + kind, scope, mask words...]."""
+    n = parent_mask.shape[0]
+    kw = (n + 31) // 32
+    bits = jnp.zeros((kw * 32,), jnp.uint32).at[:n].set(
+        parent_mask.astype(jnp.uint32))
+    words = (bits.reshape(kw, 32)
+             << jnp.arange(32, dtype=jnp.uint32)[None, :]).sum(
+        axis=1, dtype=jnp.uint32)
+    word0 = (jnp.asarray(child, jnp.int32) * 4
+             + jnp.asarray(kind_code, jnp.int32))
+    return jnp.concatenate([
+        word0[None],
+        jnp.asarray(scope, jnp.int32)[None],
+        jax.lax.bitcast_convert_type(words, jnp.int32),
+    ])
+
+
+def _set_slots(cache: FamilyScoreCache, key: Array) -> Array:
+    """(WAYS,) slot indices of the key's set (FNV-1a over the key words —
+    the hash only PLACES entries; matching is exact, word-for-word)."""
+    n_sets = cache.keys.shape[0] // WAYS
+    h = _FNV_OFFSET
+    for i in range(cache.keys.shape[1]):
+        w = jax.lax.bitcast_convert_type(key[i], jnp.uint32)
+        h = (h ^ w) * _FNV_PRIME
+    s = (h % jnp.uint32(n_sets)).astype(jnp.int32)
+    return s * WAYS + jnp.arange(WAYS, dtype=jnp.int32)
+
+
+def _priority(step: Array, col: Array) -> Array:
+    """Recency ramp + bounded score-gain bonus (PER-flavoured)."""
+    gain = jnp.max(col)          # -inf when no legal toggle improves: bonus 0
+    return step.astype(jnp.float32) + GAIN_WEIGHT * jax.nn.sigmoid(gain)
+
+
+def lookup_or_compute(
+    cache: FamilyScoreCache,
+    kind_code,
+    child,
+    parent_mask: Array,
+    scope,
+    compute_fn: Callable[[], Array],
+) -> Tuple[Array, FamilyScoreCache]:
+    """Return the (V,) column for this family, computing it only on miss.
+
+    Traceable (gather/scatter + one ``lax.cond``), so it lives inside
+    ``lax.while_loop``/``lax.scan`` bodies; on a hit the whole compute
+    closure — the O(m) count contraction — is skipped.
+    """
+    key = _pack_key(kind_code, child, parent_mask, scope)
+    slots = _set_slots(cache, key)
+    match = jnp.all(cache.keys[slots] == key[None, :], axis=1)
+    hit = jnp.any(match)
+    step = cache.step + jnp.int32(1)
+
+    def on_hit(c: FamilyScoreCache):
+        slot = slots[jnp.argmax(match)]
+        col = c.vals[slot]
+        return col, c._replace(
+            prio=c.prio.at[slot].set(_priority(step, col)),
+            step=step,
+            hits=c.hits + jnp.int32(1))
+
+    def on_miss(c: FamilyScoreCache):
+        col = compute_fn()
+        victim = slots[jnp.argmin(c.prio[slots])]
+        return col, c._replace(
+            keys=c.keys.at[victim].set(key),
+            vals=c.vals.at[victim].set(col),
+            prio=c.prio.at[victim].set(_priority(step, col)),
+            step=step,
+            misses=c.misses + jnp.int32(1))
+
+    return jax.lax.cond(hit, on_hit, on_miss, cache)
+
+
+def probe(
+    cache: FamilyScoreCache, kind_code, child, parent_mask: Array, scope
+) -> Tuple[Array, Array, FamilyScoreCache]:
+    """Hit test for HOST drivers: (hit, col, cache').
+
+    The host driver cannot close its (python) sweep over a traced branch, so
+    the lookup splits in two: ``probe`` (jit-able) answers hit/miss and
+    refreshes recency on hit; on miss the host runs its own sweep and calls
+    :func:`insert`.  ``col`` is garbage when ``hit`` is False.
+    """
+    key = _pack_key(kind_code, child, parent_mask, scope)
+    slots = _set_slots(cache, key)
+    match = jnp.all(cache.keys[slots] == key[None, :], axis=1)
+    hit = jnp.any(match)
+    slot = slots[jnp.argmax(match)]
+    col = cache.vals[slot]
+    step = cache.step + jnp.int32(1)
+    cache = cache._replace(
+        prio=cache.prio.at[slot].set(
+            jnp.where(hit, _priority(step, col), cache.prio[slot])),
+        step=jnp.where(hit, step, cache.step),
+        hits=cache.hits + hit.astype(jnp.int32))
+    return hit, col, cache
+
+
+def insert(
+    cache: FamilyScoreCache, kind_code, child, parent_mask: Array, scope,
+    col: Array,
+) -> FamilyScoreCache:
+    """Store a host-computed column after a :func:`probe` miss."""
+    key = _pack_key(kind_code, child, parent_mask, scope)
+    slots = _set_slots(cache, key)
+    step = cache.step + jnp.int32(1)
+    victim = slots[jnp.argmin(cache.prio[slots])]
+    return cache._replace(
+        keys=cache.keys.at[victim].set(key),
+        vals=cache.vals.at[victim].set(col),
+        prio=cache.prio.at[victim].set(_priority(step, col)),
+        step=step,
+        misses=cache.misses + jnp.int32(1))
+
+
+def stats(cache: FamilyScoreCache) -> dict:
+    """Host-side statistics: hits, misses, hit rate, occupancy."""
+    hits = int(cache.hits)
+    misses = int(cache.misses)
+    total = hits + misses
+    occupied = int((cache.keys[:, 0] >= 0).sum())
+    return {
+        "hits": hits,
+        "misses": misses,
+        "hit_rate": (hits / total) if total else 0.0,
+        "capacity": int(cache.keys.shape[0]),
+        "occupied": occupied,
+    }
+
+
+_probe_jit = jax.jit(probe)
+_insert_jit = jax.jit(insert)

@@ -54,22 +54,98 @@ inserting an existing edge, deleting a missing edge, candidates outside a
 so callers cannot select them by forgetting a mask and all backends agree
 entry-for-entry.  Graph-level validity (acyclicity, max_parents, allowed-edge
 sets E_i, q-guard for inserts) remains the caller's mask, as before.
+
+Two ORTHOGONAL mesh axes
+------------------------
+
+Sweeps can be distributed along two independent mesh axes that compose into
+a 2-D (or, with the ring, 3-D) device mesh:
+
+* **scoring-TP** (``axis_name``/``axis_size`` on the matrix bodies): the
+  CHILD axis is split — each device scores n/axis_size children's columns
+  and an ``all_gather`` reassembles the delta matrix.  Work partitioning;
+  every device still reads the full (m, n) data shard it holds.
+* **data axis** (``data_axis_name``, new): the INSTANCE axis is split —
+  each device holds only an m/d row-shard of ``data`` and contracts it into
+  partial contingency tables; ONE ``psum`` per table (placed inside the bdeu
+  primitives / kernel ops wrappers, before the m-independent BDeu reduction)
+  rebuilds the global counts.  Ragged m is padded with sentinel rows of
+  value ``r_max`` (out of range for every variable — counting-neutral in
+  all backends), so sharded sweeps are table-identical to single-device.
+  The VMEM Pallas delete kernel reduces counts to scores in-register
+  (scores are NOT shard-additive), so under data sharding
+  ``"fused_pallas"`` deletes route to the two-step psum-able path.
+
+The host-facing switch is ``sweep(..., data_shards=d)``, which pads, builds
+a cached jitted ``shard_map`` over a d-device ``("data",)`` mesh and runs
+the same bodies inside it.  The compiled ring threads ``data_axis_name``
+explicitly through ``ges_jit_body`` on a 2-D (ring x data) mesh.
+
+Family-score cache
+------------------
+
+:func:`sweep_column_cached` guards a column sweep with the persistent
+device-resident cache of :mod:`repro.core.score_cache`.  Key = exact packed
+``(kind, child, parent-bitmask-of-child, scope)`` — the column is a pure
+function of those (plus the static sweep program), ``scope`` naming the
+candidate restriction (ring members hash their allowed column into it; 0
+for full-n).  Keys match word-for-word (the hash only places entries in a
+set-associative table), so cached trajectories are bitwise-identical to
+uncached.  Eviction is prioritized: recency step + a bounded bonus for
+columns still holding a positive delta (PER-flavoured).  See the
+score_cache module docstring for the full contract.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
-from . import bdeu
+from . import bdeu, score_cache
 
 Array = jax.Array
 NEG_INF = -jnp.inf
 
 KINDS = ("insert", "delete")
+
+# Mesh-axis name used by the host-facing ``sweep(..., data_shards=d)`` path.
+DATA_AXIS = "data"
+
+KIND_CODES = {"insert": score_cache.KIND_INSERT,
+              "delete": score_cache.KIND_DELETE}
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions (collectives validate replication
+    rules we intentionally break: psum-of-counts produces replicated outputs
+    the checker cannot see).  Disables check_rep/check_vma where present."""
+    from jax.experimental.shard_map import shard_map as _sm
+    try:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    except TypeError:  # pragma: no cover - newer jax renamed the flag
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+
+
+def pad_data_rows(data: Array, r_max: int, d: int) -> Array:
+    """Pad the instance axis to a multiple of ``d`` with sentinel rows.
+
+    Sentinel value ``r_max`` is out of range for EVERY variable (values are
+    0..arity-1 <= r_max - 1), which all count backends treat as
+    counting-neutral (zero one-hot rows / explicit overflow segments /
+    kernel sentinel contract) — so ragged m % d != 0 sharding is exact.
+    """
+    m = int(data.shape[0])
+    m_pad = ((m + d - 1) // d) * d
+    if m_pad == m:
+        return data
+    pad = jnp.full((m_pad - m, data.shape[1]), r_max, dtype=data.dtype)
+    return jnp.concatenate([data, pad], axis=0)
 
 
 def _check_kind(kind: str) -> bool:
@@ -111,26 +187,28 @@ def _check_pids(pids, n: int, name: str = "pids") -> Array:
 # ---------------------------------------------------------------------------
 
 def sweep_column_body(data, arities, adj, y, pids, ess, max_q, r_max,
-                      counts_impl, kind):
+                      counts_impl, kind, data_axis_name=None):
     """Traceable masked delta column — callable from inside jit/shard_map.
 
     Returns (n,) deltas for toggling x -> y over all candidates x, or (W,)
     over the ``pids`` subset.  See the module docstring for the masking
     convention; with a fused ``counts_impl`` the whole column costs one joint
     contraction (insert) or one family-table build (delete) instead of one
-    table build per candidate.
+    table build per candidate.  With ``data_axis_name`` every count build
+    contracts the local m/d shard and psums (module docstring: data axis).
     """
     insert = _check_kind(kind)
     n = adj.shape[0]
     pm = adj.astype(bool)[:, y]
     base = bdeu.local_score_masked(
-        data, arities, y, pm, ess, max_q, r_max, counts_impl)
+        data, arities, y, pm, ess, max_q, r_max, counts_impl,
+        data_axis_name=data_axis_name)
     cand = jnp.arange(n, dtype=jnp.int32) if pids is None else pids
 
     if counts_impl in bdeu.FUSED_IMPLS:
         fn = bdeu.fused_insert_scores if insert else bdeu.fused_delete_scores
         deltas = fn(data, arities, y, pm, ess, max_q, r_max, counts_impl,
-                    pids=pids) - base
+                    pids=pids, data_axis_name=data_axis_name) - base
     elif insert:
         # The ONE loop-engine insert primitive (incremental config
         # encoding) — shared with bdeu._deltas_impl's full matrix, so a
@@ -138,12 +216,12 @@ def sweep_column_body(data, arities, adj, y, pids, ess, max_q, r_max,
         # matrix entries and full-n tie-breaks transfer exactly.
         deltas = bdeu.loop_insert_scores(
             data, arities, y, pm, ess, max_q, r_max, counts_impl,
-            pids=pids) - base
+            pids=pids, data_axis_name=data_axis_name) - base
     else:
         def per_parent(x):
             return bdeu.local_score_masked(
                 data, arities, y, pm.at[x].set(False), ess, max_q, r_max,
-                counts_impl)
+                counts_impl, data_axis_name=data_axis_name)
 
         deltas = jax.vmap(per_parent)(cand) - base
 
@@ -166,16 +244,19 @@ def _sweep_column(data, arities, adj, y, pids, ess, max_q, r_max,
 
 def sweep_matrix_body(data, arities, adj, ess, max_q, r_max, counts_impl,
                       kind, child_chunk=None, axis_name=None,
-                      axis_size: int = 1):
+                      axis_size: int = 1, data_axis_name=None):
     """Traceable masked (n, n) delta matrix D[x, y] for toggling x -> y.
 
     ``axis_name``/``axis_size``: optional mesh axis over which the child
     sweep is split (scoring-TP inside a ring process; see bdeu._deltas_impl).
+    ``data_axis_name``: optional ORTHOGONAL mesh axis sharding the instance
+    axis (module docstring) — composes freely with the child split.
     """
     insert = _check_kind(kind)
     fn = bdeu.insert_deltas if insert else bdeu.delete_deltas
     D = fn(data, arities, adj, ess, max_q, r_max, counts_impl, child_chunk,
-           axis_name=axis_name, axis_size=axis_size)
+           axis_name=axis_name, axis_size=axis_size,
+           data_axis_name=data_axis_name)
     n = adj.shape[0]
     eye = jnp.eye(n, dtype=bool)
     has_edge = adj.astype(bool)
@@ -197,7 +278,8 @@ def _sweep_matrix(data, arities, adj, ess, max_q, r_max, counts_impl, kind,
 
 def sweep_matrix_restricted_body(data, arities, adj, pid_table, ess, max_q,
                                  r_max, counts_impl, kind, child_chunk=None,
-                                 axis_name=None, axis_size: int = 1):
+                                 axis_name=None, axis_size: int = 1,
+                                 data_axis_name=None):
     """Traceable masked (W, n) delta matrix over a static candidate table.
 
     ``pid_table``: (n, W) int32, row y = the candidate parents of child y
@@ -221,7 +303,8 @@ def sweep_matrix_restricted_body(data, arities, adj, pid_table, ess, max_q,
     def per_child(args):
         y, pids = args
         return sweep_column_body(data, arities, adj, y, pids, ess, max_q,
-                                 r_max, counts_impl, kind)
+                                 r_max, counts_impl, kind,
+                                 data_axis_name=data_axis_name)
 
     if counts_impl == "fused" and child_chunk is None:
         # Same memory bound as bdeu._deltas_impl: a fused child column
@@ -259,6 +342,90 @@ def _sweep_matrix_restricted(data, arities, adj, pid_table, ess, max_q, r_max,
 
 
 # ---------------------------------------------------------------------------
+# Cache-guarded column sweeps (persistent family-score cache)
+# ---------------------------------------------------------------------------
+
+def sweep_column_cached(cache, data, arities, adj, y, pids, ess, max_q,
+                        r_max, counts_impl, kind, scope=0,
+                        data_axis_name=None):
+    """Column sweep guarded by the persistent family-score cache.
+
+    Returns ``(col, cache')``.  On a hit the whole column compute (the O(m)
+    count contraction) is skipped via ``lax.cond``; on a miss the computed
+    column is stored with prioritized eviction.  Key = exact packed
+    (kind, y, parents-of-y, scope) — see :mod:`repro.core.score_cache` for
+    why cached trajectories are bitwise-identical to uncached.  Traceable:
+    lives inside ``lax.while_loop``/``lax.scan`` (the compiled FES/BES
+    loops thread ``cache`` through their carries).
+    """
+    _check_kind(kind)
+    pm = adj.astype(bool)[:, y]
+
+    def compute():
+        return sweep_column_body(data, arities, adj, y, pids, ess, max_q,
+                                 r_max, counts_impl, kind,
+                                 data_axis_name=data_axis_name)
+
+    return score_cache.lookup_or_compute(
+        cache, KIND_CODES[kind], y, pm, scope, compute)
+
+
+# ---------------------------------------------------------------------------
+# Host-facing data-axis sharding: sweep(..., data_shards=d)
+# ---------------------------------------------------------------------------
+
+def _data_mesh(d: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < d:
+        raise ValueError(
+            f"data_shards={d} needs {d} devices but only {len(devs)} are "
+            f"visible — on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={d} before importing jax")
+    return Mesh(np.array(devs[:d]), (DATA_AXIS,))
+
+
+@lru_cache(maxsize=None)
+def _sharded_sweep_fn(d: int, mode: str, has_pids: bool, ess, max_q: int,
+                      r_max: int, counts_impl: str, kind: str,
+                      child_chunk):
+    """Cached jitted shard_map program for one static sweep configuration.
+
+    ``mode``: "column" | "matrix" | "matrix_restricted".  Data is sharded
+    along the mesh's data axis; everything else is replicated, and the
+    psum'd result is replicated (identical on every device) by construction.
+    """
+    mesh = _data_mesh(d)
+
+    if mode == "column":
+        if has_pids:
+            def body(data, arities, adj, y, pids):
+                return sweep_column_body(
+                    data, arities, adj, y, pids, ess, max_q, r_max,
+                    counts_impl, kind, data_axis_name=DATA_AXIS)
+            in_specs = (P(DATA_AXIS), P(), P(), P(), P())
+        else:
+            def body(data, arities, adj, y):
+                return sweep_column_body(
+                    data, arities, adj, y, None, ess, max_q, r_max,
+                    counts_impl, kind, data_axis_name=DATA_AXIS)
+            in_specs = (P(DATA_AXIS), P(), P(), P())
+    elif mode == "matrix":
+        def body(data, arities, adj):
+            return sweep_matrix_body(
+                data, arities, adj, ess, max_q, r_max, counts_impl, kind,
+                child_chunk, data_axis_name=DATA_AXIS)
+        in_specs = (P(DATA_AXIS), P(), P())
+    else:
+        def body(data, arities, adj, pid_table):
+            return sweep_matrix_restricted_body(
+                data, arities, adj, pid_table, ess, max_q, r_max,
+                counts_impl, kind, child_chunk, data_axis_name=DATA_AXIS)
+        in_specs = (P(DATA_AXIS), P(), P(), P())
+
+    return jax.jit(shard_map_compat(body, mesh, in_specs, P()))
+
+
+# ---------------------------------------------------------------------------
 # The single public entry point
 # ---------------------------------------------------------------------------
 
@@ -276,6 +443,7 @@ def sweep(
     pids: Optional[Array] = None,
     pid_table: Optional[Array] = None,
     child_chunk: Optional[int] = None,
+    data_shards: int = 1,
 ) -> Array:
     """Masked BDeu delta sweep — the one API behind GES, the ring, and cGES.
 
@@ -294,6 +462,12 @@ def sweep(
     width exceeds n or that contains ids outside [0, n) raises ValueError
     instead of silently gathering wrong shapes.
 
+    ``data_shards=d`` (> 1) shards the INSTANCE axis over a d-device
+    ``("data",)`` mesh: ragged m is padded with counting-neutral sentinel
+    rows, each device contracts its m/d shard and one psum per table
+    rebuilds the global counts — results are table-identical to
+    ``data_shards=1`` under every backend (module docstring: data axis).
+
     Dispatches to the loop / fused-jnp / fused-Pallas backend named by
     ``counts_impl``; all backends return identical masked columns (see the
     module docstring for the -inf convention at illegal toggles).
@@ -301,6 +475,11 @@ def sweep(
     _check_kind(kind)
     bdeu.check_counts_impl(counts_impl)
     n = adj.shape[0]
+    d = 1 if data_shards is None else int(data_shards)
+    if d < 1:
+        raise ValueError(f"data_shards must be >= 1, got {data_shards}")
+    if d > 1:
+        data = pad_data_rows(jnp.asarray(data), r_max, d)
     if pid_table is not None:
         if y is not None or pids is not None:
             raise ValueError("pid_table is a whole-matrix restriction — "
@@ -309,6 +488,10 @@ def sweep(
         if pid_table.ndim != 2 or pid_table.shape[0] != n:
             raise ValueError(f"pid_table must be (n, W) = ({n}, W), got "
                              f"{pid_table.shape}")
+        if d > 1:
+            fn = _sharded_sweep_fn(d, "matrix_restricted", True, ess, max_q,
+                                   r_max, counts_impl, kind, child_chunk)
+            return fn(data, arities, adj, pid_table)
         return _sweep_matrix_restricted(data, arities, adj, pid_table, ess,
                                         max_q, r_max, counts_impl, kind,
                                         child_chunk)
@@ -317,11 +500,20 @@ def sweep(
             raise ValueError("pids restriction requires a column sweep "
                              "(pass y) — for a restricted matrix pass "
                              "pid_table")
+        if d > 1:
+            fn = _sharded_sweep_fn(d, "matrix", False, ess, max_q, r_max,
+                                   counts_impl, kind, child_chunk)
+            return fn(data, arities, adj)
         return _sweep_matrix(data, arities, adj, ess, max_q, r_max,
                              counts_impl, kind, child_chunk)
     if pids is not None:
         pids = _check_pids(pids, n, name="pids")
         if pids.ndim != 1:
             raise ValueError(f"pids must be 1-D (W,), got {pids.shape}")
+    if d > 1:
+        fn = _sharded_sweep_fn(d, "column", pids is not None, ess, max_q,
+                               r_max, counts_impl, kind, child_chunk)
+        args = (data, arities, adj, jnp.int32(y))
+        return fn(*args, pids) if pids is not None else fn(*args)
     return _sweep_column(data, arities, adj, jnp.int32(y), pids, ess, max_q,
                          r_max, counts_impl, kind)

@@ -23,7 +23,8 @@ def _resolve_interpret(interpret) -> bool:
     return bool(interpret)
 
 
-@partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "interpret", "use_ref"))
+@partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "interpret",
+                                   "use_ref", "data_axis_name"))
 def contingency_counts(
     cfg: jax.Array,
     child: jax.Array,
@@ -33,6 +34,7 @@ def contingency_counts(
     tile_m: int = 256,
     interpret: bool | None = None,
     use_ref: bool = False,
+    data_axis_name: str | None = None,
 ) -> jax.Array:
     """(max_q, r_max) f32 contingency table for one (parent-config, child) pair.
 
@@ -40,6 +42,11 @@ def contingency_counts(
     child axis to the 128-lane MXU boundary; the validated Pallas kernel runs
     in interpret mode on CPU and compiled on TPU (``interpret=None`` resolves
     per-backend).
+
+    ``data_axis_name``: inside shard_map with the instance axis sharded, each
+    device counts only its m/d shard; contingency tables are additive over
+    instances, so one ``psum`` over that mesh axis reconstructs the global
+    table before the (m-independent) BDeu reduction.
     """
     interpret = _resolve_interpret(interpret)
     m = cfg.shape[0]
@@ -55,4 +62,7 @@ def contingency_counts(
         counts = contingency_counts_pallas(
             cfg_p, child_p, max_q=max_q, r_pad=r_pad, tile_m=tile_m,
             interpret=interpret)
-    return counts[:, :r_max]
+    counts = counts[:, :r_max]
+    if data_axis_name is not None:
+        counts = jax.lax.psum(counts, data_axis_name)
+    return counts

@@ -25,7 +25,7 @@ def _resolve_interpret(interpret) -> bool:
 
 
 @partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "tile_n",
-                                   "interpret", "use_ref"))
+                                   "interpret", "use_ref", "data_axis_name"))
 def sweep_counts(
     cfg: jax.Array,
     child: jax.Array,
@@ -37,6 +37,7 @@ def sweep_counts(
     tile_n: int = 32,
     interpret: bool | None = None,
     use_ref: bool = False,
+    data_axis_name: str | None = None,
 ) -> jax.Array:
     """(r_max, max_q, n*r_max) f32 joint sweep counts for one child.
 
@@ -46,6 +47,11 @@ def sweep_counts(
     child/data=r_max: all-zero one-hot rows/columns) and slices the padding
     back off; the validated Pallas kernel runs in interpret mode on CPU and
     compiled on TPU (``interpret=None`` resolves per-backend).
+
+    ``data_axis_name``: inside shard_map with the instance axis sharded, each
+    device contracts only its m/d one-hot shard; the joint counts are
+    additive over instances, so one ``psum`` over that mesh axis rebuilds the
+    global tables before the (m-independent) BDeu reduction.
     """
     interpret = _resolve_interpret(interpret)
     m, n = data.shape
@@ -65,11 +71,14 @@ def sweep_counts(
                                      max_q=max_q, r_max=r_max,
                                      tile_m=tile_m, tile_n=tile_n,
                                      interpret=interpret)
-    return counts[:, :, :n * r_max]
+    counts = counts[:, :, :n * r_max]
+    if data_axis_name is not None:
+        counts = jax.lax.psum(counts, data_axis_name)
+    return counts
 
 
 @partial(jax.jit, static_argnames=("max_q", "r_max", "tile_m", "tile_n",
-                                   "interpret", "use_ref"))
+                                   "interpret", "use_ref", "data_axis_name"))
 def sweep_counts_restricted(
     cfg: jax.Array,
     child: jax.Array,
@@ -82,6 +91,7 @@ def sweep_counts_restricted(
     tile_n: int = 32,
     interpret: bool | None = None,
     use_ref: bool = False,
+    data_axis_name: str | None = None,
 ) -> jax.Array:
     """(r_max, max_q, W*r_max) joint sweep counts over the W candidates in
     ``pids`` only — the restricted-E_i variant for the ring.
@@ -103,7 +113,7 @@ def sweep_counts_restricted(
     tn = min(tile_n, _round_up(w, 8))
     return sweep_counts(cfg, child, data_w, max_q=max_q, r_max=r_max,
                         tile_m=tile_m, tile_n=tn, interpret=interpret,
-                        use_ref=use_ref)
+                        use_ref=use_ref, data_axis_name=data_axis_name)
 
 
 @partial(jax.jit, static_argnames=("ess", "max_q", "r_max", "tile_m",
@@ -143,6 +153,12 @@ def delete_scores(
     (``interpret=None`` resolves per-backend); the max_q overflow guard
     stays in ``bdeu.fused_delete_scores`` (shared with the jnp reference
     path).
+
+    NOTE: this kernel reduces counts to SCORES in-VMEM, and scores (unlike
+    counts) are not additive over instance shards — so it deliberately takes
+    no ``data_axis_name``.  Under data sharding ``bdeu.fused_delete_scores``
+    routes to the two-step table-build + marginalization path (whose counts
+    CAN be psum'd); this kernel's per-shard accumulation is unchanged.
     """
     interpret = _resolve_interpret(interpret)
     m = cfg.shape[0]
@@ -150,6 +166,13 @@ def delete_scores(
     m_pad = _round_up(max(m, tile_m), tile_m)
     k_pad = _round_up(max(k, 1), 128)
     r_pad = _round_up(r_max, 8 if interpret else 128)
+    # Sentinel DATA rows (core/sweeps.pad_data_rows writes r_max into every
+    # column, so child == r_max there) get the same cfg = max_q drop the
+    # m-padding below uses: the VMEM table's child axis is r_pad >= r_max
+    # wide, so an unmasked sentinel row would land in a padding column with
+    # an in-range cfg instead of vanishing.
+    cfg = jnp.where(child.astype(jnp.int32) < r_max,
+                    cfg.astype(jnp.int32), max_q)
     cfg_p = jnp.full((m_pad,), max_q, dtype=jnp.int32).at[:m].set(
         cfg.astype(jnp.int32))
     child_p = jnp.zeros((m_pad,), dtype=jnp.int32).at[:m].set(

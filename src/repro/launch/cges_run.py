@@ -36,7 +36,8 @@ import time
 
 import numpy as np
 
-from ..core import GESConfig, ScoreCache, bdeu, fusion, ges_host, partition
+from ..core import (DeviceFamilyCache, GESConfig, ScoreCache, bdeu, fusion,
+                    ges_host, partition)
 from ..core.cges import edge_add_limit
 from ..core.dag import smhd_np
 from ..data.bn import benchmark_bn, forward_sample
@@ -44,12 +45,16 @@ from ..data.bn import benchmark_bn, forward_sample
 
 def ring_rounds(data, arities, edge_masks, config, add_limit, max_rounds,
                 ckpt_dir=None, fail_at_round=None, fail_member=None,
-                cache=None, verbose=True, fusion_engine=None):
+                cache=None, verbose=True, fusion_engine=None,
+                family_cache=None):
     """The learning stage as an explicit, checkpointable round loop.
 
     ``fusion_engine`` picks the host or traceable implementation of the
     unified sigma-consistent edge union (core/fusion.py) — identical
     adjacencies either way; ``None`` defaults from REPRO_FUSION_ENGINE.
+    ``family_cache``: optional shared DeviceFamilyCache handle — the
+    device-resident persistent column cache every member/round consults
+    (trajectory-identical; see core/score_cache).
     """
     fusion_engine = fusion.resolve_fusion_engine(fusion_engine)
     k0, n, _ = edge_masks.shape
@@ -91,7 +96,8 @@ def ring_rounds(data, arities, edge_masks, config, add_limit, max_rounds,
                         graphs[i], pred, engine=fusion_engine).astype(np.int8))
             res = ges_host(data, arities, init_adj=init,
                            allowed=edge_masks[i], add_limit=add_limit,
-                           config=config, cache=cache)
+                           config=config, cache=cache,
+                           family_cache=family_cache)
             new_graphs.append(res.adj)
             new_scores.append(res.score)
         graphs = new_graphs
@@ -146,6 +152,21 @@ def main():
                          "same layer the compiled ring traces); default "
                          "reads REPRO_FUSION_ENGINE, else host.  Identical "
                          "adjacencies either way")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="shard the instance (m) axis over this many devices "
+                         "— each device contracts m/d rows into the count "
+                         "tables and ONE psum merges them before the cheap "
+                         "BDeu reduction (table-identical to 1).  host "
+                         "engine: every sweep runs on a d-device data mesh; "
+                         "ring engine: the mesh becomes 2-D (ring k x data "
+                         "d) and needs k*d devices")
+    ap.add_argument("--family-cache", action="store_true",
+                    help="persistent device-resident family-score cache "
+                         "(core/score_cache): memoises (child, parent-set) "
+                         "columns across GES iterations, rounds and ring "
+                         "members with prioritized eviction; trajectories "
+                         "stay bitwise-identical.  Also via "
+                         "REPRO_FAMILY_CACHE=1")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-round", type=int, default=None)
     ap.add_argument("--fail-member", type=int, default=0)
@@ -154,21 +175,28 @@ def main():
     if args.engine == "ring" and (args.ckpt_dir or args.fail_at_round
                                   is not None):
         ap.error("--ckpt-dir / --fail-at-round are host-engine features")
-    if args.engine == "ring":
-        # The compiled ring needs k devices on its mesh axis.  XLA_FLAGS
-        # must be set before the backend initializes, which importing
-        # repro.core already did — so on a too-small platform we re-exec
-        # this driver once with forced host devices.
+    if args.data_shards < 1:
+        ap.error("--data-shards must be >= 1")
+    # Device requirement: the compiled ring needs k devices on its ring
+    # axis, times d when the data axis is on; the host engine needs d for
+    # its per-sweep data mesh.  XLA_FLAGS must be set before the backend
+    # initializes, which importing repro.core already did — so on a
+    # too-small platform we re-exec this driver once with forced host
+    # devices.
+    need = (args.k * args.data_shards if args.engine == "ring"
+            else args.data_shards)
+    if need > 1:
         import jax
 
-        if len(jax.devices()) < args.k:
+        if len(jax.devices()) < need:
             flags = os.environ.get("XLA_FLAGS", "")
             if "host_platform_device_count" in flags:
                 raise SystemExit(
-                    f"--engine ring needs >= k={args.k} devices, found "
-                    f"{len(jax.devices())}")
+                    f"--engine {args.engine} with k={args.k} "
+                    f"data_shards={args.data_shards} needs >= {need} "
+                    f"devices, found {len(jax.devices())}")
             os.environ["XLA_FLAGS"] = (
-                flags + f" --xla_force_host_platform_device_count={args.k}"
+                flags + f" --xla_force_host_platform_device_count={need}"
             ).strip()
             os.execv(sys.executable, [sys.executable, "-m",
                                       "repro.launch.cges_run"] + sys.argv[1:])
@@ -179,42 +207,61 @@ def main():
     n = bn.n
     print(f"{args.family} scale={args.scale}: n={n}, m={args.m}")
 
-    config = GESConfig(max_q=1024, counts_impl=args.counts_impl)
+    config = GESConfig(max_q=1024, counts_impl=args.counts_impl,
+                       data_shards=(args.data_shards
+                                    if args.engine == "host" else 1),
+                       family_cache=(args.family_cache
+                                     or GESConfig().family_cache))
     masks = partition.partition_edges(data, bn.arities, args.k)
     lim = edge_add_limit(n, args.k) if args.limit else None
     cache = ScoreCache()
+    family_cache = (DeviceFamilyCache(n, config.cache_capacity)
+                    if config.family_cache else None)
 
     ring_w = None
+    ring_cache_stats = None
     if args.engine == "ring":
         import jax
         from jax.sharding import Mesh
         from ..core.ring import RingSpec, ring_cges
 
         devs = jax.devices()
-        if len(devs) < args.k:
+        d = args.data_shards
+        if len(devs) < args.k * d:
             raise SystemExit(
-                f"--engine ring needs >= k={args.k} devices, found "
+                f"--engine ring needs >= k*d={args.k * d} devices, found "
                 f"{len(devs)} (XLA_FLAGS already initialized?)")
         pid_tables = partition.pid_tables(masks)
         ring_w = int(pid_tables.shape[2])
-        mesh = Mesh(np.array(devs[:args.k]), ("ring",))
-        spec = RingSpec(k=args.k, max_rounds=args.max_rounds)
-        graphs, scores, rounds = ring_cges(
+        if d > 1:
+            mesh = Mesh(np.array(devs[:args.k * d]).reshape(args.k, d),
+                        ("ring", "data"))
+            spec = RingSpec(k=args.k, max_rounds=args.max_rounds,
+                            data_axis="data", data_axis_size=d)
+        else:
+            mesh = Mesh(np.array(devs[:args.k]), ("ring",))
+            spec = RingSpec(k=args.k, max_rounds=args.max_rounds)
+        out_ring = ring_cges(
             data, bn.arities, masks, mesh, spec, config,
-            add_limit=lim, pid_tables=pid_tables)
+            add_limit=lim, pid_tables=pid_tables,
+            return_cache_stats=config.family_cache)
+        graphs, scores, rounds = out_ring[0], out_ring[1], out_ring[2]
+        if config.family_cache:
+            ring_cache_stats = out_ring[3]
         adj = graphs[int(np.argmax(scores))]
         print(f"compiled ring: {rounds} rounds, W={ring_w} "
-              f"(restricted sweep width vs n={n})")
+              f"(restricted sweep width vs n={n}, data shards={d})")
     else:
         adj, score, rounds, masks = ring_rounds(
             data, bn.arities, masks, config, lim, args.max_rounds,
             ckpt_dir=args.ckpt_dir, fail_at_round=args.fail_at_round,
             fail_member=args.fail_member, cache=cache,
-            fusion_engine=args.fusion_engine)
+            fusion_engine=args.fusion_engine, family_cache=family_cache)
 
     # fine-tuning pass (unrestricted GES) — carries GES's guarantees
     res = ges_host(data, bn.arities, init_adj=adj, allowed=None,
-                   add_limit=None, config=config, cache=cache)
+                   add_limit=None, config=config, cache=cache,
+                   family_cache=family_cache)
     wall = time.time() - t0
     out = {
         "family": args.family, "n": n, "m": args.m, "k": args.k,
@@ -224,9 +271,14 @@ def main():
         "smhd_vs_truth": smhd_np(res.adj, bn.adj),
         "wall_s": round(wall, 2),
         "cache_hits": cache.hits, "cache_misses": cache.misses,
+        "data_shards": args.data_shards,
     }
     if ring_w is not None:
         out["ring_W"] = ring_w
+    if family_cache is not None:
+        out["family_cache"] = family_cache.stats()
+    if ring_cache_stats is not None:
+        out["ring_family_cache"] = ring_cache_stats
     print(json.dumps(out, indent=2))
     if args.out:
         with open(args.out, "a") as f:

@@ -97,3 +97,32 @@ def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
     n_active = cfg.active_param_count()
     mult = 6.0 if shape_kind == "train" else 2.0
     return mult * n_active * n_tokens
+
+
+def sweep_data_axis_terms(n: int, m: int, width: int, r_max: int, max_q: int,
+                          data_shards: int = 1,
+                          bytes_per: int = 4) -> Dict[str, float]:
+    """Analytic per-device roofline inputs for ONE W-wide count sweep under
+    d-way data-axis sharding (core/sweeps, ``data_shards``/``RingSpec.
+    data_axis``).
+
+    The m-proportional terms — the (m, n·r_max) one-hot read and the
+    m x (W·Q·R) contraction — scale by the LOCAL rows m/d, because each
+    data-axis device contracts only its shard; counting full m per chip
+    (the pre-data-axis model) overstates HBM traffic and flops d-fold.
+    The m-independent (W, Q, R) count tables are written once per device
+    and, for d > 1, traverse the links once as a psum (all-reduce = 2x the
+    payload per chip, matching :func:`collective_bytes`); the BDeu
+    reduction that follows is m-free and stays out of the byte model.
+    Feed the result to :func:`roofline_terms`.
+    """
+    d = max(int(data_shards), 1)
+    m_local = -(-int(m) // d)                       # ceil: padded shard rows
+    onehot_bytes = float(m_local) * n * r_max * bytes_per
+    table_bytes = float(width) * max_q * r_max * bytes_per
+    return {
+        "flops": 2.0 * m_local * width * max_q * r_max,
+        "hbm_bytes": onehot_bytes + table_bytes,
+        "link_bytes": (2.0 * table_bytes) if d > 1 else 0.0,
+        "m_local": float(m_local),
+    }

@@ -1,0 +1,235 @@
+"""Data-axis sharding (core/sweeps ``data_shards`` / ring 2-D mesh):
+sentinel-row padding neutrality per backend, psum'd sharded sweeps
+table-identical to single-device entry-for-entry (d in {1, 2}, ragged
+m % d != 0, all counts_impl backends; multi-device via subprocess), and
+end-to-end trajectory identity for ges_host / ges_jit / the compiled ring.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GESConfig, ges_host, pad_data_rows, sweeps
+from repro.core.sweeps import sweep
+
+from _hypothesis_compat import given, settings, st
+
+IMPLS = ["segment", "onehot", "fused", "fused_pallas"]
+
+
+def _case(seed=0, n=8, m=101):
+    rng = np.random.default_rng(seed)
+    arities = rng.integers(2, 4, size=n).astype(np.int64)
+    data = np.stack([rng.integers(0, a, size=m) for a in arities], 1)
+    return data.astype(np.int64), arities
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=97),
+       st.integers(min_value=1, max_value=5))
+def test_pad_data_rows_contract(m, d):
+    """Padded rows: multiple-of-d length, original rows untouched, every
+    sentinel cell == r_max (out of range for EVERY column's arity)."""
+    rng = np.random.default_rng(m * 7 + d)
+    n, r_max = 4, 3
+    data = rng.integers(0, r_max, size=(m, n)).astype(np.int32)
+    out = np.asarray(pad_data_rows(jnp.asarray(data), r_max, d))
+    m_pad = ((m + d - 1) // d) * d
+    assert out.shape == (m_pad, n)
+    assert np.array_equal(out[:m], data)
+    assert (out[m:] == r_max).all()
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("kind", ["insert", "delete"])
+def test_sentinel_rows_are_neutral(impl, kind):
+    """The padding trick itself, isolated from any mesh: a sweep over data
+    with appended sentinel rows (value r_max in every column) is bitwise
+    the unpadded sweep on EVERY backend — one_hot drops OOB rows, the
+    segment paths route them to an explicit OOB bucket, and the Pallas
+    kernels' select/slice can never match a value >= r_max."""
+    data, arities = _case(seed=3)
+    n = arities.size
+    r_max = int(arities.max())
+    adj = np.zeros((n, n), dtype=np.int8)
+    adj[[1, 2], 0] = 1
+    padded = np.asarray(pad_data_rows(jnp.asarray(data.astype(np.int32)),
+                                      r_max, 4))
+    assert padded.shape[0] > data.shape[0]      # 101 % 4 != 0: rows added
+    aj = jnp.asarray(arities.astype(np.int32))
+    kw = dict(kind=kind, y=0, ess=10.0, max_q=64, r_max=r_max,
+              counts_impl=impl)
+    ref = np.asarray(sweep(jnp.asarray(data.astype(np.int32)), aj,
+                           jnp.asarray(adj), **kw))
+    got = np.asarray(sweep(jnp.asarray(padded), aj, jnp.asarray(adj), **kw))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_data_shards_one_is_the_plain_path():
+    """d=1 must not route through shard_map at all (no mesh required)."""
+    data, arities = _case()
+    n = arities.size
+    adj = np.zeros((n, n), dtype=np.int8)
+    dj = jnp.asarray(data.astype(np.int32))
+    aj = jnp.asarray(arities.astype(np.int32))
+    kw = dict(kind="insert", y=0, ess=10.0, max_q=64,
+              r_max=int(arities.max()), counts_impl="segment")
+    a = np.asarray(sweep(dj, aj, jnp.asarray(adj), **kw))
+    b = np.asarray(sweep(dj, aj, jnp.asarray(adj), data_shards=1, **kw))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_data_shards_validation():
+    with pytest.raises(ValueError):
+        GESConfig(data_shards=0)
+    data, arities = _case()
+    with pytest.raises(ValueError):
+        sweep(jnp.asarray(data.astype(np.int32)),
+              jnp.asarray(arities.astype(np.int32)),
+              jnp.zeros((arities.size, arities.size), jnp.int8),
+              kind="insert", y=0, ess=10.0, max_q=64,
+              r_max=int(arities.max()), counts_impl="segment",
+              data_shards=0)
+
+
+def test_data_mesh_error_names_the_fix():
+    """Asking for more data shards than devices must fail with the
+    XLA_FLAGS hint, not an opaque mesh error (single-device test session)."""
+    import jax
+
+    want = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        sweeps._data_mesh(want)
+
+
+def test_sharded_sweeps_table_identical_subprocess():
+    """d in {2, 4}-device data meshes: column, matrix and restricted-matrix
+    sweeps for both kinds on all three backend families are ENTRY-FOR-ENTRY
+    identical to the single-device sweep, at ragged m (m % d != 0 exercises
+    the sentinel padding through the real psum path)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core.sweeps import sweep
+
+        rng = np.random.default_rng(7)
+        n, m = 8, 101
+        arities = rng.integers(2, 4, size=n).astype(np.int64)
+        data = np.stack([rng.integers(0, a, size=m) for a in arities], 1)
+        dj = jnp.asarray(data.astype(np.int32))
+        aj = jnp.asarray(arities.astype(np.int32))
+        r_max = int(arities.max())
+        adj = np.zeros((n, n), np.int8)
+        adj[[1, 2], 0] = 1
+        adj[[0, 3], 4] = 1
+        adjj = jnp.asarray(adj)
+        pids = jnp.asarray(np.array([1, 2, 3, 5], np.int32))
+        tbl = jnp.asarray(
+            np.stack([np.array([(y + i + 1) % n for i in range(3)],
+                               np.int32) for y in range(n)]))
+        kw = dict(ess=10.0, max_q=64, r_max=r_max)
+        checked = 0
+        for impl in ("segment", "onehot", "fused", "fused_pallas"):
+            for kind in ("insert", "delete"):
+                calls = [dict(kind=kind, y=0),
+                         dict(kind=kind, y=0, pids=pids),
+                         dict(kind=kind),
+                         dict(kind=kind, pid_table=tbl)]
+                for c in calls:
+                    ref = np.asarray(sweep(dj, aj, adjj, counts_impl=impl,
+                                           **kw, **c))
+                    for d in (2, 4):
+                        got = np.asarray(sweep(dj, aj, adjj,
+                                               counts_impl=impl,
+                                               data_shards=d, **kw, **c))
+                        assert np.array_equal(got, ref), (impl, kind, d, c)
+                        checked += 1
+        assert checked == 64, checked
+        print("SHARD_OK", checked)
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "SHARD_OK" in r.stdout
+
+
+def test_end_to_end_sharded_trajectories_subprocess():
+    """ges_host (config.data_shards), ges_jit (the shard_map'd full-GES
+    program) and the compiled ring on a 2-D (ring x data) mesh all take
+    the IDENTICAL trajectory as their single-device runs (same adjacency,
+    same score, same round count), with ragged m."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import GESConfig, ges_host, ges_jit, partition
+        from repro.core.ring import RingSpec, ring_cges
+        from repro.data.bn import forward_sample, random_bn
+
+        rng = np.random.default_rng(11)
+        bn = random_bn(rng, n=8, n_edges=9, max_parents=2)
+        data = forward_sample(bn, 401, rng)     # ragged vs d=2
+        n = bn.n
+
+        # ges_host
+        r1 = ges_host(data, bn.arities,
+                      config=GESConfig(max_q=64, counts_impl="fused"))
+        r2 = ges_host(data, bn.arities,
+                      config=GESConfig(max_q=64, counts_impl="fused",
+                                       data_shards=2))
+        assert np.array_equal(r1.adj, r2.adj)
+        assert r1.score == r2.score
+
+        # ges_jit
+        allowed = ~np.eye(n, dtype=bool)
+        init = np.zeros((n, n), np.int8)
+        a1, s1, _, _ = ges_jit(data, bn.arities, init, allowed,
+                               config=GESConfig(max_q=64,
+                                                counts_impl="segment"))
+        a2, s2, _, _ = ges_jit(data, bn.arities, init, allowed,
+                               config=GESConfig(max_q=64,
+                                                counts_impl="segment",
+                                                data_shards=2))
+        assert np.array_equal(np.asarray(a1), np.asarray(a2))
+        assert float(s1) == float(s2)
+
+        # compiled ring: 1-D (ring,) vs 2-D (ring, data)
+        k = 2
+        masks = partition.partition_edges(data, bn.arities, k)
+        devs = np.array(jax.devices())
+        cfg = GESConfig(max_q=64, counts_impl="fused")
+        g1, sc1, ro1 = ring_cges(
+            data, bn.arities, masks, Mesh(devs[:k], ("ring",)),
+            RingSpec(k=k, max_rounds=3), cfg)
+        g2, sc2, ro2 = ring_cges(
+            data, bn.arities, masks,
+            Mesh(devs.reshape(k, 2), ("ring", "data")),
+            RingSpec(k=k, max_rounds=3, data_axis="data",
+                     data_axis_size=2), cfg)
+        assert np.array_equal(g1, g2)
+        assert np.array_equal(sc1, sc2)
+        assert ro1 == ro2
+        print("TRAJ_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "TRAJ_OK" in r.stdout
