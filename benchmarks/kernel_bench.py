@@ -23,6 +23,13 @@ jit at the same n, against the pre-refactor traceable baseline that
 recomputed the full longest-path depth per covered reversal (kept inline
 below as ``_legacy_fuse_jit``), plus the fusion/sweep per-round cost ratio
 that decides whether compiled ring rounds are sweep-bound or fusion-bound.
+
+``async_ring`` records the asynchronous double-buffered ring
+(core/ring_async): per-round wall vs the warm lockstep compiled ring on
+the same seeded partition, the permute-wait/fuse/sweep phase breakdown
+per member (blocked transfer wait vs sweep time is the overlap
+evidence), trajectory parity, and a kill-one-member elastic run
+converging with k-1 members.
 """
 from __future__ import annotations
 
@@ -494,6 +501,117 @@ def bench_family_cache(n: int = 120, m: int = 2000, k: int = 4,
     }
 
 
+def bench_async_ring(n: int = 12, m: int = 800, k: int = 3,
+                     max_rounds: int = 8, seed: int = 7) -> dict:
+    """Async double-buffered ring (core/ring_async) vs the lockstep compiled
+    ring on one seeded problem, plus the elastic kill-one-member drill.
+
+    Both engines run warm (one throwaway run each eats compilation) on the
+    SAME partition, and healthy async replays the lockstep trajectory
+    exactly, so the comparison is pure per-round wall time.  Single-core
+    honesty, same spirit as bench_data_sharded: the k threaded members
+    share this one core, so the measured walls compare the two real
+    programs' total per-round cost — the lockstep ring executes every
+    member's GES inner loop inside ONE synchronized XLA program per round
+    (plus the pmax barrier), while async members run their loops
+    independently and receive the predecessor BN into the double-buffered
+    mailbox WHILE sweeping.  The per-member phase rows are the k-host
+    story: ``permute_wait_us`` is the blocked remainder of neighbor
+    transfer (the part NOT hidden behind the sweep) and stays 2-3 orders
+    under ``sweep_us``.  ``rounds_executed`` > committed rounds is the
+    bounded speculation window — those sweeps are wasted only on one core;
+    on k hosts they overlap the verdict lap.
+    """
+    from repro.core import GESConfig, partition
+    from repro.core.ring import RingSpec, ring_cges
+    from repro.core.ring_async import run_ring_async_threads
+    from repro.data.bn import forward_sample, random_bn
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(seed)
+    bn = random_bn(rng, n=n, n_edges=int(1.3 * n), max_parents=2)
+    data = forward_sample(bn, m, rng)
+    cfg = GESConfig(max_q=256, counts_impl="fused")
+    masks = partition.partition_edges(data, bn.arities, k)
+    pid_j = jnp.asarray(partition.pid_tables(masks))
+
+    # lockstep compiled ring, W-wide (the exact engine="jax" program)
+    mesh = make_host_mesh(k)
+    spec = RingSpec(k=k, max_rounds=max_rounds)
+    ring_cges(data, bn.arities, masks, mesh, spec, cfg, pid_tables=pid_j)
+    t0 = time.perf_counter()
+    _, s_lock, r_lock = ring_cges(data, bn.arities, masks, mesh, spec, cfg,
+                                  pid_tables=pid_j)
+    lock_wall = time.perf_counter() - t0
+
+    # async threaded ring (same run_member path the process launcher runs)
+    kw = dict(config=cfg, max_rounds=max_rounds, wall_limit_s=600.0)
+    run_ring_async_threads(data, bn.arities, masks, **kw)
+    t0 = time.perf_counter()
+    out = run_ring_async_threads(data, bn.arities, masks, **kw)
+    async_wall = time.perf_counter() - t0
+
+    surv = out["survivors"]
+    r_exec = max(out["members"][i]["rounds_executed"] for i in surv)
+    lock_round = lock_wall / max(r_lock, 1) * 1e6
+    async_round = async_wall / max(out["rounds"], 1) * 1e6
+    tot = {ph: sum(float(np.sum(out["members"][i]["timings"][ph]))
+                   for i in surv)
+           for ph in ("wait_us", "fuse_us", "sweep_us")}
+    per_member = {
+        str(i): {
+            "permute_wait_us": round(float(np.sum(
+                out["members"][i]["timings"]["wait_us"]))
+                / out["members"][i]["rounds_executed"], 1),
+            "fuse_us": round(float(np.sum(
+                out["members"][i]["timings"]["fuse_us"]))
+                / out["members"][i]["rounds_executed"], 1),
+            "sweep_us": round(float(np.sum(
+                out["members"][i]["timings"]["sweep_us"]))
+                / out["members"][i]["rounds_executed"], 1),
+        }
+        for i in surv}
+
+    rec = {
+        "n": n, "m": m, "k": k, "max_rounds": max_rounds,
+        "counts_impl": cfg.counts_impl, "max_q": cfg.max_q,
+        "lockstep": {"round_us": round(lock_round, 1),
+                     "rounds": int(r_lock),
+                     "best_score": round(float(np.max(s_lock)), 3)},
+        "async": {"round_us": round(async_round, 1),
+                  "rounds": int(out["rounds"]),
+                  "rounds_executed": int(r_exec),
+                  "best_score": round(float(out["best_score"]), 3),
+                  # blocked transfer wait vs sweep: the overlap evidence
+                  "wait_fraction_of_sweep": round(
+                      tot["wait_us"] / max(tot["sweep_us"], 1e-9), 4),
+                  "phase_us_per_round": per_member},
+        "round_speedup_vs_lockstep": round(lock_round / async_round, 2),
+        "trajectory_match": bool(
+            int(out["rounds"]) == int(r_lock)
+            and abs(float(out["best_score"]) - float(np.max(s_lock)))
+            <= 1e-2),
+    }
+
+    # elastic drill: member 1 goes silent after round 1; survivors fold its
+    # E_1 into its ring predecessor, re-stitch, and converge with k-1
+    kill = run_ring_async_threads(
+        data, bn.arities, masks, config=cfg, max_rounds=max_rounds,
+        die_member=1, die_after_round=1, hb_timeout_s=1.5,
+        wall_limit_s=600.0)
+    rec["elastic"] = {
+        "die_member": 1, "die_after_round": 1,
+        "survivors": kill["survivors"],
+        "rounds": int(kill["rounds"]),
+        "best_score": round(float(kill["best_score"]), 3),
+        "converged": bool(not kill["timed_out"]
+                          and np.isfinite(kill["best_score"])),
+        "deaths_via": sorted({d["via"] for i in kill["survivors"]
+                              for d in kill["members"][i]["deaths"]}),
+    }
+    return rec
+
+
 def _repo_metadata() -> dict:
     try:
         commit = subprocess.run(
@@ -526,6 +644,7 @@ def main():
         rec["data_sharded"] = bench_data_sharded(n=args.sweep_n,
                                                  m=args.sweep_m)
         rec["family_cache"] = bench_family_cache()
+        rec["async_ring"] = bench_async_ring()
         with open(args.sweep_json, "w") as f:
             json.dump(rec, f, indent=2)
             f.write("\n")
@@ -572,6 +691,13 @@ def main():
               f"column_sweeps_skipped={fc['column_sweeps_skipped']} "
               f"per_round_speedup={fc['per_round_speedup']}x "
               f"identical={fc['trajectory_identical']}")
+        ar = rec["async_ring"]
+        print(f"ring_async/round,{ar['async']['round_us']:.0f},"
+              f"lockstep={ar['lockstep']['round_us']:.0f}us "
+              f"speedup={ar['round_speedup_vs_lockstep']}x "
+              f"wait/sweep={ar['async']['wait_fraction_of_sweep']} "
+              f"match={ar['trajectory_match']} "
+              f"elastic_survivors={ar['elastic']['survivors']}")
 
 
 if __name__ == "__main__":

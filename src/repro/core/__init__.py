@@ -9,6 +9,8 @@ from .partition import (partition_edges, variable_clusters, edge_subsets,
 from .fusion import (fuse, fuse_trace, fusion_edge_union, sigma_consistent,
                      gho_order, check_fusion_engine, resolve_fusion_engine)
 from .ring import RingSpec, ring_cges, build_ring_program, fuse_jit
+from .ring_async import (AsyncRingSpec, run_member, run_ring_async_threads,
+                         send_frame, recv_frame)
 from .score_cache import FamilyScoreCache
 from .sweeps import pad_data_rows, sweep
 from . import bdeu, dag, metrics, score_cache, sweeps

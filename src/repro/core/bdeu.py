@@ -679,7 +679,20 @@ def graph_score_jax(
     counts_impl: str = "segment",
     data_axis_name: str | None = None,
 ) -> Array:
-    """Total BDeu of a DAG (jit-safe): sum of all n local scores."""
+    """Total BDeu of a DAG (jit-safe): sum of all n local scores.
+
+    Families whose true q exceeds ``max_q`` score -inf here (the compiled
+    tables are max_q-wide by construction), whereas :func:`graph_score_np`
+    reports the unguarded BDeu.  A fused init graph can hand GES such a
+    family, and if BES never profits from deleting it the two engines then
+    report different totals for the SAME final graph (the compiled one
+    -inf) — score comparisons across engines must either avoid the guard
+    (raise max_q) or compare finite entries only.  Worse, when the guard
+    bites a base family but not its delete-reduced families, the compiled
+    BES sees +inf deltas and deletes where the host engine (np-exact,
+    unguarded local scores) sees the true negative delta and keeps —
+    host-vs-compiled trajectory pins must therefore run with max_q above
+    every family q the fused inits can produce."""
     n = adj.shape[0]
     children = jnp.arange(n, dtype=jnp.int32)
     masks = adj.astype(bool).T  # row y of masks = parents of y

@@ -17,6 +17,13 @@ Engines:
     are dispatched concurrently by the ring executor in core/ring.py).
   * engine="jax": each process's GES is the fully-compiled ges_jit program —
     the building block the shard_map ring uses on device meshes.
+  * engine="async": the asynchronous double-buffered ring
+    (``core/ring_async.py``): k members run concurrently (threads here; the
+    multi-process launcher is ``launch/ring_async_run.py``), each sweeping
+    with ges_jit, exchanging BNs over sockets the moment a sweep finishes,
+    with a circulating convergence token instead of a per-round barrier.
+    Healthy runs follow the lockstep trajectory exactly; the engine also
+    survives member death mid-run (elastic re-partition).
 
 Both engines rescore exclusively through the unified sweep engine
 (``core/sweeps.sweep``) and honour ``GESConfig.counts_impl``; with a fused
@@ -138,6 +145,30 @@ def cges(
              if engine == "jax" else None)
 
     # ---- Stage 2: ring learning ------------------------------------------
+    if engine == "async":
+        # concurrent members + circulating convergence token replace the
+        # lockstep round loop below; healthy trajectories are identical
+        from . import ring_async
+        ring = ring_async.run_ring_async_threads(
+            data, arities, edge_masks, config=config,
+            add_limit=add_limit, max_rounds=max_rounds)
+        rounds = int(ring["rounds"])
+        ring_scores = [float(s) for s in ring["ring_scores"]]
+        best_adj = np.asarray(ring["best_adj"], dtype=np.int8)
+        best_score = float(ring["best_score"])
+        evals += int(ring["n_score_evals"])
+        # a real k-process deployment's ring wall time is the slowest
+        # member's own busy+blocked span, not this 1-core serialization
+        parallel_wall += max(
+            sum(float(np.sum(results_i["timings"][ph]))
+                for ph in ("wait_us", "fuse_us", "sweep_us"))
+            for results_i in (ring["members"][i] for i in ring["survivors"])
+        ) / 1e6
+        return _finish_cges(
+            data, arities, data_j, ar_j, r_max, best_adj,
+            config, engine, cache, dev_cache, jax_caches, evals,
+            rounds, ring_scores, edge_masks, parallel_wall, t0)
+
     rounds = 0
     go = True
     while go and rounds < max_rounds:
@@ -191,9 +222,23 @@ def cges(
         else:
             go = False
 
-    # ---- Stage 3: fine tuning (unrestricted GES) --------------------------
+    return _finish_cges(
+        data, arities, data_j, ar_j, r_max, best_adj,
+        config, engine, cache, dev_cache, jax_caches, evals,
+        rounds, ring_scores, edge_masks, parallel_wall, t0)
+
+
+def _finish_cges(data, arities, data_j, ar_j, r_max, best_adj,
+                 config, engine, cache, dev_cache, jax_caches, evals,
+                 rounds, ring_scores, edge_masks, parallel_wall,
+                 t0) -> CGESResult:
+    """Stage 3 (unrestricted fine-tuning GES from the ring winner) plus
+    result assembly — shared by the lockstep round loop and the async-ring
+    engine.  The compiled engines ("jax", "async") fine-tune with ges_jit;
+    the host engine reuses its shared caches."""
+    n = data.shape[1]
     t_ft = time.perf_counter()
-    if engine == "jax":
+    if engine in ("jax", "async"):
         adj_f, score_f, n_ins, n_del = ges_jit(
             data_j, ar_j, jnp.asarray(best_adj.astype(np.int8)),
             jnp.ones((n, n), dtype=jnp.int8),

@@ -36,6 +36,36 @@ The entire learning stage — all rounds, all k processes — is a single
 jit-compiled program; one host call runs cGES's stage 2 to convergence.
 This is also the program that is `.lower().compile()`d on the production
 (16, 16) and (2, 16, 16) meshes by launch/dryrun.py (arch id: ``cges_ring``).
+
+This lockstep program is the TRAJECTORY ORACLE: every round is a global
+barrier (ppermute -> fuse -> sweep -> pmax), which makes it bitwise
+reproducible but also means neighbor transfer never overlaps compute and
+the slowest member stalls the whole ring.  The asynchronous multi-process
+path (``core/ring_async.py``, ``cges(engine="async")``,
+``launch/ring_async_run.py``) relaxes exactly the barrier column of the
+mapping while keeping each member's compute identical:
+
+  * k ring processes        ->  k OS processes (or threads), each running
+                                the SAME ges_jit restricted sweep
+  * "send BN to successor"  ->  a length-prefixed socket frame posted the
+                                moment the sweep finishes; a round-keyed
+                                double-buffered mailbox lets the transfer
+                                overlap the successor's (W, n) sweep
+  * BN fusion               ->  the same unified core/fusion layer, on the
+                                receiving member, off the mailbox
+  * convergence check       ->  a token circulating the ring (one lap
+                                collects every member's round score; the
+                                verdict lap commits or stops), with a
+                                bounded speculation window instead of pmax
+  * membership              ->  ELASTIC: heartbeat failure detection, the
+                                dead member's E_i folded into its ring
+                                predecessor (partition.remerge_failed
+                                semantics), ring re-stitched so k-1
+                                members finish the run
+
+Healthy async runs replay the lockstep trajectory exactly (speculative
+rounds never diverge because fuse/GES inputs don't depend on verdicts);
+the oracle here is what the async tests pin against.
 """
 from __future__ import annotations
 
@@ -224,7 +254,12 @@ def ring_cges(
     (hits / misses / hit_rate) to the return tuple.
     """
     k, n, _ = edge_masks.shape
-    assert k == spec.k
+    if k != spec.k:
+        # asserts vanish under ``python -O`` and the mismatch would
+        # otherwise surface as an opaque shard_map shape error
+        raise ValueError(
+            f"edge_masks carries k={k} ring members but RingSpec.k="
+            f"{spec.k} — the partition and the mesh spec must agree")
     config = config if config is not None else GESConfig()
     r_max = int(arities.max())
     lim = int(n * n if add_limit is None else add_limit)

@@ -1,0 +1,896 @@
+"""The asynchronous, double-buffered, elastic ring — cGES stage 2 as a true
+multi-process distributed system.
+
+``core/ring.py`` is the lockstep oracle: one single-process ``shard_map``
+program whose every round is a global barrier (ppermute -> fuse -> sweep ->
+pmax).  This module is the deployment shape the paper actually describes —
+k processes working *concurrently* on restricted edge subsets — with three
+properties the compiled program cannot express:
+
+* **asynchronous rounds** — a member posts its round-t BN to its ring
+  successor the moment its sweep finishes (a background sender thread owns
+  the socket, so the (W, n) sweep of round t+1 starts immediately) and
+  begins round t+1 as soon as its *predecessor's* round-t BN is in the
+  double-buffered mailbox — which it normally already is, because the
+  transfer overlapped round t's fuse+sweep.  The per-round blocked-wait
+  time is therefore the *un-overlapped* remainder of neighbor transfer,
+  and is recorded per member per round (see ``timings`` in the result).
+* **token convergence** — there is no global ``pmax`` barrier.  A token
+  circulates the ring: the origin (first live member) injects token(t)
+  after finishing round t, every member stamps its round-t score when it
+  has one and forwards, and the returned token yields a verdict
+  (improved / stop) that circulates back.  Members may run up to
+  ``speculation`` rounds ahead of the newest verdict (default 2 — the
+  double-buffer depth); speculative rounds never diverge because fusion
+  and GES inputs do not depend on verdicts, so a healthy async run's
+  per-member trajectory is IDENTICAL to the lockstep ring's.
+* **elastic membership** — each member heartbeats its successor; a member
+  whose predecessor goes silent past ``hb_timeout_s`` declares it dead,
+  folds the victim's edge subset E_v into the victim's ring predecessor
+  (partition.remerge_failed semantics, computed locally from the shared
+  static member table), gossips the death around the ring, re-stitches its
+  inbound edge, and the remaining k-1 members finish the run.  On
+  re-stitch the new predecessor replays its recent BN history (bounded by
+  the speculation depth, so no round can be lost).
+
+Why the data plane is raw TCP and not jax collectives: multi-process
+collectives do not exist on the CPU backend ("Multiprocess computations
+aren't implemented"), collectives are bulk-synchronous (exactly the barrier
+this module removes) and fixed-membership (a dead participant deadlocks the
+ring), and jax's coordination service *terminates* surviving processes when
+a peer dies — the opposite of elastic.  ``jax.distributed.initialize`` is
+still used for what it is good at: bootstrapping the healthy multi-process
+cluster (process ids, and the global device view on real multi-host
+hardware); members opt in via ``AsyncRingSpec.jax_coordinator``.  The
+elastic (kill-a-member) path runs with it off, and the module docchain +
+tests record why.
+
+Entry points:
+
+* :func:`run_member` — one ring member, blocking; the unit both the
+  threaded and the multi-process modes execute.
+* :func:`run_ring_async_threads` — in-process mode: k members as threads
+  over localhost sockets (ges_jit compilations shared); used by
+  ``cges(engine="async")``, the benchmarks and most tests.
+* ``repro.launch.ring_async_run`` — the multi-process launcher: k OS
+  processes on a local TCP cluster (CI) or k hosts (real deployment),
+  optionally bootstrapped by ``jax.distributed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import fusion, partition
+
+NEG = float("-inf")
+_LEN = struct.Struct(">I")
+_DEBUG = bool(int(os.environ.get("RING_ASYNC_DEBUG", "0")))
+
+
+def _dbg(*parts) -> None:
+    if _DEBUG:
+        print(f"[ring_async {time.monotonic():.3f}]", *parts, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Wire protocol: 4-byte length + JSON header [+ raw payload]
+# ---------------------------------------------------------------------------
+
+def send_frame(sock: socket.socket, header: dict,
+               payload: bytes = b"") -> None:
+    h = dict(header)
+    if payload:
+        h["payload_bytes"] = len(payload)
+    raw = json.dumps(h).encode()
+    sock.sendall(_LEN.pack(len(raw)) + raw + payload)
+
+
+def _recv_exact(f, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = f.read(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed")
+        buf += chunk
+    return buf
+
+
+def recv_frame(f) -> Tuple[dict, bytes]:
+    (hlen,) = _LEN.unpack(_recv_exact(f, 4))
+    header = json.loads(_recv_exact(f, hlen).decode())
+    payload = _recv_exact(f, header.get("payload_bytes", 0)) \
+        if header.get("payload_bytes") else b""
+    return header, payload
+
+
+# ---------------------------------------------------------------------------
+# Round-keyed mailbox (the double-buffered neighbor-exchange slot)
+# ---------------------------------------------------------------------------
+
+class Mailbox:
+    """Round-keyed slots filled by the receiver thread, drained by the
+    compute loop.  ``get(rnd)`` measures the *un-overlapped* part of the
+    neighbor transfer: when the predecessor's BN arrived while this member
+    was still sweeping the previous round, the get returns immediately."""
+
+    def __init__(self):
+        self._slots: Dict[int, tuple] = {}
+        self._cv = threading.Condition()
+
+    def put(self, rnd: int, item: tuple) -> None:
+        with self._cv:
+            # first write wins: replayed history must not overwrite
+            self._slots.setdefault(rnd, item)
+            self._cv.notify_all()
+
+    def get(self, rnd: int, stop: threading.Event,
+            timeout: float) -> Optional[tuple]:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while rnd not in self._slots:
+                left = deadline - time.monotonic()
+                if left <= 0 or stop.is_set():
+                    return None
+                self._cv.wait(min(left, 0.05))
+            return self._slots[rnd]
+
+    def drop_below(self, rnd: int) -> None:
+        with self._cv:
+            for r in [r for r in self._slots if r < rnd]:
+                del self._slots[r]
+
+
+# ---------------------------------------------------------------------------
+# Outbound link: background sender w/ reconnect + history replay
+# ---------------------------------------------------------------------------
+
+class _Sender(threading.Thread):
+    """Owns the outbound socket to the CURRENT ring successor.  Sends are
+    enqueued (compute never blocks on the network — this is what lets the
+    round-t transfer overlap the round-t+1 sweep) and the thread replays
+    the member's recent BN history whenever the successor changes, so a
+    re-stitched ring never loses a round."""
+
+    def __init__(self, me: int, replay):
+        super().__init__(daemon=True)
+        self._me = me
+        self._replay = replay              # () -> list[(header, payload)]
+        self._q: deque = deque()
+        self._cv = threading.Condition()
+        self._target: Optional[Tuple[str, int]] = None
+        self._retarget = False
+        self._stop = False
+        self._drain_deadline = float("inf")
+        self._sock: Optional[socket.socket] = None
+
+    def set_target(self, addr: Tuple[str, int]) -> None:
+        with self._cv:
+            if addr == self._target:
+                return
+            self._target = addr
+            self._retarget = True
+            self._cv.notify_all()
+
+    def post(self, header: dict, payload: bytes = b"") -> None:
+        with self._cv:
+            self._q.append((header, payload))
+            self._cv.notify_all()
+
+    def close(self, drain_s: float = 1.0) -> None:
+        with self._cv:
+            self._stop = True
+            self._drain_deadline = time.monotonic() + drain_s
+            self._cv.notify_all()
+
+    def _connect(self) -> Optional[socket.socket]:
+        with self._cv:
+            target = self._target
+        if target is None:
+            return None
+        try:
+            s = socket.create_connection(target, timeout=5.0)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            send_frame(s, {"t": "hello", "frm": self._me})
+            for header, payload in self._replay():
+                send_frame(s, header, payload)
+            _dbg(f"sender[{self._me}] connected -> {target}")
+            return s
+        except OSError as e:
+            _dbg(f"sender[{self._me}] connect {target} failed: {e}")
+            return None
+
+    def run(self) -> None:
+        backoff = 0.02
+        while True:
+            with self._cv:
+                while not (self._q or self._stop or self._retarget):
+                    self._cv.wait(0.2)
+                if self._stop and (not self._q
+                                   or time.monotonic()
+                                   > self._drain_deadline):
+                    break
+                if self._retarget:
+                    self._retarget = False
+                    if self._sock is not None:
+                        try:
+                            self._sock.close()
+                        except OSError:
+                            pass
+                        self._sock = None
+                item = self._q[0] if self._q else None
+            if self._sock is None:
+                self._sock = self._connect()
+                if self._sock is None:
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2, 0.5)
+                    continue
+                backoff = 0.02
+            if item is None:
+                continue
+            try:
+                send_frame(self._sock, item[0], item[1])
+                with self._cv:
+                    if self._q and self._q[0] is item:
+                        self._q.popleft()
+            except OSError:
+                # successor unreachable: drop the socket, retry (a DEAD
+                # gossip will re-target us if it actually died)
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                self._sock = None
+                time.sleep(backoff)
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Member spec / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AsyncRingSpec:
+    """One ring member's identity + the shared static member table.
+
+    ``peers`` is the same tuple on every member: ((id, host, port), ...) in
+    ring order — member i sends to the next *live* entry after it.  The
+    convergence-token origin is the first live entry.  ``speculation`` is
+    the double-buffer depth: how many rounds a member may run ahead of the
+    newest global verdict (2 = compute round t+1 while round t's token
+    laps the ring).  ``jax_coordinator`` opts into
+    ``jax.distributed.initialize`` for cluster bootstrap (healthy runs;
+    see module docstring for why the elastic path keeps it off).
+    ``die_after_round`` is fault injection for tests/benchmarks: the
+    member hard-exits (process mode) or goes silent (thread mode) after
+    posting that round's BN."""
+    member_id: int
+    peers: Tuple[Tuple[int, str, int], ...]
+    max_rounds: int = 16
+    speculation: int = 2
+    hb_interval_s: float = 0.25
+    hb_timeout_s: float = 3.0
+    connect_timeout_s: float = 30.0
+    wall_limit_s: float = 600.0
+    history: int = 6                     # BN replay buffer (> speculation+2)
+    jax_coordinator: Optional[str] = None
+    die_after_round: Optional[int] = None
+    die_hard: bool = False               # True: os._exit(13) (process mode)
+
+
+def _addr(peers, pid) -> Tuple[str, int]:
+    for q, host, port in peers:
+        if q == pid:
+            return (host, port)
+    raise KeyError(pid)
+
+
+class _MemberState:
+    """Everything the receiver/heartbeat/compute threads share."""
+
+    def __init__(self, spec: AsyncRingSpec, edge_masks: np.ndarray):
+        ids = [p[0] for p in spec.peers]
+        self.mu = threading.RLock()
+        self.live: List[int] = list(ids)          # ring order, live only
+        self.masks: Dict[int, np.ndarray] = {
+            pid: np.asarray(edge_masks[i]).astype(bool)
+            for i, pid in enumerate(ids)}
+        self.mask_dirty = False                   # my E_i grew (re-partition)
+        self.pred_box = Mailbox()
+        self.tokens: Dict[int, dict] = {}         # round -> buffered token
+        self.verdicts: Dict[int, dict] = {}
+        self.last_verdict = -1
+        self.best = NEG                           # origin: best before round
+        self.want_token = 0                       # origin: next round to lap
+        self.injected: set = set()                # rounds whose token we sent
+        self.token_sent_at = 0.0
+        self.last_seen: Dict[int, float] = {pid: time.monotonic()
+                                            for pid in ids}
+        self.heard: set = set()                   # peers actually heard from
+        self.stop = threading.Event()
+        self.stop_rounds: Optional[int] = None
+        self.deaths: List[dict] = []              # applied DEAD events (log)
+        self.verdict_cv = threading.Condition(self.mu)
+
+
+def _succ(live: List[int], me: int) -> int:
+    i = live.index(me)
+    return live[(i + 1) % len(live)]
+
+
+def _pred(live: List[int], me: int) -> int:
+    i = live.index(me)
+    return live[(i - 1) % len(live)]
+
+
+# ---------------------------------------------------------------------------
+# The member
+# ---------------------------------------------------------------------------
+
+def run_member(
+    data: np.ndarray,
+    arities: np.ndarray,
+    edge_masks: np.ndarray,
+    spec: AsyncRingSpec,
+    config=None,
+    add_limit: Optional[int] = None,
+    listen_sock: Optional[socket.socket] = None,
+    seen_dead=None,
+) -> dict:
+    """Run ONE async ring member to convergence; blocking.
+
+    ``edge_masks`` is the full (k, n, n) partition — every member holds all
+    subsets so a death can be re-partitioned locally (fold E_v into its
+    ring predecessor) with no coordinator.  Returns a dict with the
+    member's kept BN (last globally-improving round, exactly the lockstep
+    ring's ``g_keep``), its score, executed/committed round counts, the
+    final live membership, and per-round phase timings
+    ``{"wait_us", "fuse_us", "sweep_us"}`` — ``wait_us`` is the blocked
+    wait for the predecessor BN, i.e. the UN-overlapped part of neighbor
+    transfer (≈0 when the double buffer is doing its job).
+    """
+    # jax bootstrap first (must precede backend init), then jax-side imports
+    if spec.jax_coordinator is not None:
+        import jax
+
+        ids = [p[0] for p in spec.peers]
+        jax.distributed.initialize(
+            coordinator_address=spec.jax_coordinator,
+            num_processes=len(ids),
+            process_id=ids.index(spec.member_id),
+            initialization_timeout=int(spec.connect_timeout_s))
+    import jax.numpy as jnp
+
+    from .ges import GESConfig, ges_jit
+
+    config = config if config is not None else GESConfig()
+    me = spec.member_id
+    k0, n, _ = np.asarray(edge_masks).shape
+    st = _MemberState(spec, edge_masks)
+    if seen_dead:                        # deaths known before start (tests)
+        for v in seen_dead:
+            _apply_dead(st, spec, me, int(v), sender=None)
+
+    data_j = jnp.asarray(np.asarray(data).astype(np.int32))
+    ar_j = jnp.asarray(np.asarray(arities).astype(np.int32))
+    r_max = int(np.asarray(arities).max())
+    # one shared W across members -> all k members reuse one compiled
+    # ges_jit program (pid_tables pads to the partition-wide max occupancy)
+    shared_w = int(partition.pid_tables(np.asarray(edge_masks)).shape[2])
+
+    hist: Dict[int, np.ndarray] = {}     # round -> own adjacency
+    scores: Dict[int, float] = {}
+    bn_history: deque = deque(maxlen=spec.history)   # (header, payload)
+    hist_mu = threading.Lock()
+
+    def replay():
+        with hist_mu:
+            return list(bn_history)
+
+    sender = _Sender(me, replay)
+    sender.set_target(_addr(spec.peers, _succ(st.live, me)))
+    sender.start()
+
+    # ---- inbound -----------------------------------------------------------
+    if listen_sock is None:
+        listen_sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listen_sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listen_sock.bind(_addr(spec.peers, me))
+        listen_sock.listen(8)
+    listen_sock.settimeout(0.25)
+
+    def handle(header: dict, payload: bytes) -> None:
+        typ = header.get("t")
+        frm = header.get("frm", header.get("by", -1))
+        with st.mu:
+            if frm in st.last_seen:
+                st.last_seen[frm] = time.monotonic()
+                st.heard.add(frm)
+        if typ == "bn":
+            adj = np.frombuffer(payload, dtype=np.int8).reshape(n, n)
+            st.pred_box.put(int(header["round"]),
+                            (adj, float(header["score"]), frm))
+        elif typ == "tok":
+            _on_token(header)
+        elif typ == "ver":
+            _on_verdict(header)
+        elif typ == "dead":
+            _on_dead(header)
+        # "hb"/"hello": liveness update above is all they carry
+
+    def reader(conn: socket.socket) -> None:
+        f = conn.makefile("rb")
+        try:
+            while not st.stop.is_set():
+                header, payload = recv_frame(f)
+                handle(header, payload)
+        except (ConnectionError, OSError, ValueError) as e:
+            _dbg(f"member[{me}] reader closed: {e!r}")
+        except Exception as e:               # a handler bug must be loud
+            _dbg(f"member[{me}] reader CRASH: {e!r}")
+            raise
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def acceptor() -> None:
+        while not st.stop.is_set():
+            try:
+                conn, _ = listen_sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=reader, args=(conn,), daemon=True).start()
+
+    threading.Thread(target=acceptor, daemon=True).start()
+
+    # ---- control-plane handlers -------------------------------------------
+    def _forward(header: dict, payload: bytes = b"") -> None:
+        # liveness is credited per direct link: every relayed frame carries
+        # the RELAYER as frm (origin/by/victim fields hold the semantics),
+        # so hearing a forwarded verdict never vouches for a peer we have
+        # no connection from
+        h = dict(header)
+        h["frm"] = me
+        sender.post(h, payload)
+
+    def _is_origin() -> bool:
+        with st.mu:
+            return st.live[0] == me
+
+    def _emit_verdict(rnd: int, round_best: float) -> None:
+        """Origin only: token(rnd) completed a full lap — decide."""
+        with st.mu:
+            if rnd in st.verdicts:
+                return
+            improved = round_best > st.best + config.tol
+            stop = (not improved) or (rnd + 1 >= spec.max_rounds)
+            st.best = max(st.best, round_best)
+            ver = {"t": "ver", "frm": me, "origin": me, "round": rnd,
+                   "improved": bool(improved), "best": st.best,
+                   "stop": bool(stop), "rounds": rnd + 1}
+            st.want_token = rnd + 1
+            more = len(st.live) > 1
+        _apply_verdict(ver)
+        if more:
+            _forward(ver)
+        # the next round may ALREADY be computed (speculation): lap its
+        # token immediately instead of waiting for the stale-token timer
+        if not ver["stop"] and ver["round"] + 1 in scores:
+            _inject_token(ver["round"] + 1)
+
+    def _on_token(tok: dict) -> None:
+        rnd = int(tok["round"])
+        with st.mu:
+            if rnd in st.verdicts:
+                return                       # stale (re-injected) lap
+            done = rnd in scores
+            if not done:
+                st.tokens[rnd] = tok         # stamp when we finish rnd
+                return
+        _stamp_forward(tok)
+
+    def _stamp_forward(tok: dict) -> None:
+        rnd = int(tok["round"])
+        stamped = set(tok.get("stamped", []))
+        rb = float(tok["round_best"])
+        if me not in stamped:
+            stamped.add(me)
+            rb = max(rb, scores[rnd])
+        with st.mu:
+            missing = [p for p in st.live if p not in stamped]
+        if not missing:
+            if int(tok["origin"]) == me or _is_origin():
+                _emit_verdict(rnd, rb)
+            else:                            # origin died mid-lap: hand back
+                _forward({"t": "tok", "frm": me, "origin": tok["origin"],
+                          "round": rnd, "round_best": rb,
+                          "stamped": sorted(stamped)})
+            return
+        _forward({"t": "tok", "frm": me, "origin": tok["origin"],
+                  "round": rnd, "round_best": rb,
+                  "stamped": sorted(stamped)})
+
+    def _apply_verdict(ver: dict) -> None:
+        rnd = int(ver["round"])
+        with st.mu:
+            if rnd in st.verdicts:
+                return
+            st.verdicts[rnd] = ver
+            st.last_verdict = max(st.last_verdict, rnd)
+            st.verdict_cv.notify_all()
+        if ver["improved"] and rnd in hist:
+            nonlocal g_report, s_report, committed
+            g_report, s_report = hist[rnd], scores[rnd]
+            committed = rnd
+        for r in [r for r in hist if r <= rnd]:
+            hist.pop(r, None)
+        st.pred_box.drop_below(rnd - 1)
+        if ver["stop"]:
+            with st.mu:
+                st.stop_rounds = int(ver["rounds"])
+            st.stop.set()
+
+    def _on_verdict(ver: dict) -> None:
+        rnd = int(ver["round"])
+        with st.mu:
+            known = rnd in st.verdicts
+        _apply_verdict(ver)
+        if not known and int(ver["origin"]) != me:
+            _forward(dict(ver))              # origin drops its own echo
+
+    def _on_dead(msg: dict) -> None:
+        v = int(msg["victim"])
+        with st.mu:
+            fresh = v in st.live
+        if not fresh:
+            return                           # gossip completed its cycle
+        _apply_dead(st, spec, me, v, sender)
+        st.deaths.append({"victim": v, "via": "gossip",
+                          "by": int(msg.get("by", -1))})
+        if len(st.live) > 1:
+            _forward(dict(msg))
+
+    # ---- heartbeat / failure detector -------------------------------------
+    def heartbeats() -> None:
+        while not st.stop.is_set():
+            time.sleep(spec.hb_interval_s)
+            sender.post({"t": "hb", "frm": me})
+            with st.mu:
+                if len(st.live) <= 1:
+                    continue
+                pred = _pred(st.live, me)
+                silent = time.monotonic() - st.last_seen.get(
+                    pred, time.monotonic())
+                # startup grace: a peer we never heard from gets the full
+                # connect window before being declared dead (process-mode
+                # members can be seconds apart importing jax)
+                limit = (spec.hb_timeout_s if pred in st.heard
+                         else max(spec.hb_timeout_s, spec.connect_timeout_s))
+            if silent > limit:
+                _dbg(f"member[{me}] declares {pred} dead "
+                     f"(silent {silent:.1f}s)")
+                _apply_dead(st, spec, me, pred, sender)
+                st.deaths.append({"victim": pred, "via": "heartbeat",
+                                  "by": me})
+                with st.mu:
+                    more = len(st.live) > 1
+                if more:
+                    _forward({"t": "dead", "victim": pred, "by": me})
+            # origin (possibly newly promoted after a death): re-inject a
+            # token that was lost with a dead member
+            if _is_origin():
+                with st.mu:
+                    rnd = max(st.want_token, st.last_verdict + 1)
+                    ready = rnd in scores and rnd not in st.verdicts
+                    stale = time.monotonic() - st.token_sent_at \
+                        > max(4 * spec.hb_timeout_s, 2.0)
+                if ready and stale:
+                    _inject_token(rnd, force=True)
+
+    def _inject_token(rnd: int, force: bool = False) -> None:
+        with st.mu:
+            if not force and rnd in st.injected:
+                return
+            st.injected.add(rnd)
+            st.token_sent_at = time.monotonic()
+            alone = len(st.live) == 1
+        tok = {"t": "tok", "frm": me, "origin": me, "round": rnd,
+               "round_best": scores[rnd], "stamped": [me]}
+        if alone:
+            _emit_verdict(rnd, scores[rnd])
+        else:
+            _forward(tok)
+
+    threading.Thread(target=heartbeats, daemon=True).start()
+
+    # ---- the compute loop --------------------------------------------------
+    g_own = np.zeros((n, n), dtype=np.int8)
+    g_report = np.zeros((n, n), dtype=np.int8)
+    s_report = NEG
+    committed = -1
+    member_cache = None
+    pid_j = allowed_j = None
+    wait_us: List[float] = []
+    fuse_us: List[float] = []
+    sweep_us: List[float] = []
+    evals = 0
+    deadline = time.monotonic() + spec.wall_limit_s
+    timed_out = False
+    rnd = 0
+
+    def _rebuild_tables() -> None:
+        nonlocal pid_j, allowed_j
+        mask = st.masks[me]
+        occ = int(mask.sum(axis=0).max()) if n else 0
+        width = max(shared_w, occ, 1) if n else 0
+        tbl = partition.pid_table_from_allowed(mask, width=width)
+        pid_j = jnp.asarray(tbl)
+        allowed_j = jnp.asarray(mask.astype(np.int8))
+
+    _rebuild_tables()
+    lim = int(n * n if add_limit is None else add_limit)
+
+    while rnd < spec.max_rounds and not st.stop.is_set():
+        # speculation cap: at most `speculation` rounds past newest verdict
+        with st.mu:
+            while (rnd - st.last_verdict > spec.speculation + 1
+                   and not st.stop.is_set()
+                   and time.monotonic() < deadline):
+                st.verdict_cv.wait(0.05)
+        if st.stop.is_set():
+            break
+        if time.monotonic() > deadline:
+            timed_out = True
+            break
+        with st.mu:
+            if st.mask_dirty:
+                st.mask_dirty = False
+                _rebuild_tables()            # absorbed a dead member's E_v
+            alone = len(st.live) == 1
+
+        t0 = time.monotonic()
+        if rnd == 0:
+            init = np.zeros((n, n), dtype=np.int8)
+            wait_us.append(0.0)
+            fuse_us.append(0.0)
+        else:
+            got = st.pred_box.get(rnd - 1, st.stop,
+                                  timeout=deadline - time.monotonic())
+            t1 = time.monotonic()
+            wait_us.append((t1 - t0) * 1e6)
+            if got is None:
+                if st.stop.is_set():
+                    break
+                timed_out = True
+                break
+            g_pred = got[0]
+            init = fusion.fusion_edge_union(g_own, g_pred).astype(np.int8)
+            fuse_us.append((time.monotonic() - t1) * 1e6)
+
+        t2 = time.monotonic()
+        out = ges_jit(data_j, ar_j, jnp.asarray(init), allowed_j,
+                      add_limit=lim, config=config, r_max=r_max,
+                      pid_table=pid_j, cache=member_cache,
+                      return_cache=config.family_cache)
+        if config.family_cache:
+            adj_j, score_j, n_ins, n_del, member_cache = out
+        else:
+            adj_j, score_j, n_ins, n_del = out
+        g_own = np.asarray(adj_j, dtype=np.int8)
+        score = float(score_j)
+        w_now = int(pid_j.shape[1])
+        evals += w_now * n + w_now * (int(n_ins) + int(n_del))
+        sweep_us.append((time.monotonic() - t2) * 1e6)
+
+        hist[rnd] = g_own
+        scores[rnd] = score
+        header = {"t": "bn", "frm": me, "round": rnd, "score": score}
+        payload = g_own.tobytes()
+        with hist_mu:
+            bn_history.append((header, payload))
+        if alone:
+            st.pred_box.put(rnd, (g_own, score, me))
+        sender.post(header, payload)         # transfer overlaps next round
+
+        # stamp any token that was waiting on this round; origin injects
+        with st.mu:
+            pending = st.tokens.pop(rnd, None)
+        if pending is not None:
+            _stamp_forward(pending)
+        if _is_origin():
+            with st.mu:
+                want = st.want_token
+            if want == rnd:
+                _inject_token(rnd)
+
+        if spec.die_after_round is not None and rnd == spec.die_after_round:
+            if spec.die_hard:
+                os._exit(13)                 # a real death: no goodbye
+            # thread mode: go silent (stop sending, stop answering)
+            sender.close(drain_s=0.0)
+            st.stop.set()
+            try:
+                listen_sock.close()
+            except OSError:
+                pass
+            return {"member": me, "died": True, "rounds_executed": rnd + 1}
+        rnd += 1
+
+    # drain: wait briefly for the stop verdict if we hit max_rounds first
+    if not st.stop.is_set() and not timed_out:
+        st.stop.wait(timeout=max(deadline - time.monotonic(), 0.0))
+    time.sleep(0.05)                         # let forwarded frames flush
+    sender.close()
+    st.stop.set()
+    try:
+        listen_sock.close()
+    except OSError:
+        pass
+    with st.mu:
+        rounds = st.stop_rounds if st.stop_rounds is not None else rnd
+        live = list(st.live)
+        deaths = list(st.deaths)
+    return {
+        "member": me,
+        "adj": g_report,
+        "score": s_report,
+        "rounds": int(rounds),
+        "rounds_executed": int(rnd),
+        "committed_round": int(committed),
+        "live": live,
+        "deaths": deaths,
+        "timed_out": timed_out,
+        "W": int(pid_j.shape[1]) if pid_j is not None else 0,
+        "n_score_evals": int(evals),
+        "round_scores": {int(r): float(s) for r, s in sorted(scores.items())},
+        "timings": {"wait_us": wait_us, "fuse_us": fuse_us,
+                    "sweep_us": sweep_us},
+    }
+
+
+def _apply_dead(st: _MemberState, spec: AsyncRingSpec, me: int, victim: int,
+                sender: Optional[_Sender]) -> None:
+    """Elastic repair, applied locally by every member: drop the victim
+    from the live ring, fold its E_v into its ring predecessor's subset
+    (the same rule as partition.remerge_failed), and re-stitch our
+    outbound link if our successor changed."""
+    with st.mu:
+        if victim not in st.live or len(st.live) == 1:
+            return
+        i = st.live.index(victim)
+        absorber = st.live[(i - 1) % len(st.live)]
+        st.live.remove(victim)
+        st.masks[absorber] = st.masks[absorber] | st.masks[victim]
+        if absorber == me:
+            st.mask_dirty = True
+        succ = _succ(st.live, me)
+        # victim may have been holding an unstamped token; clear its slot
+        st.last_seen.pop(victim, None)
+        # the re-stitch hands us a new predecessor whose last direct frame
+        # (if any) may be arbitrarily old — restart its liveness clock and
+        # re-grant the first-contact grace so a stale timestamp can't fire
+        # the failure detector one tick after the topology change while the
+        # new pred is still dialing our listener
+        new_pred = _pred(st.live, me)
+        st.last_seen[new_pred] = time.monotonic()
+        st.heard.discard(new_pred)
+    if sender is not None:
+        sender.set_target(_addr(spec.peers, succ))
+
+
+# ---------------------------------------------------------------------------
+# In-process threaded mode
+# ---------------------------------------------------------------------------
+
+def _free_listeners(k: int):
+    socks = []
+    for _ in range(k):
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind(("127.0.0.1", 0))
+        s.listen(8)
+        socks.append(s)
+    return socks
+
+
+def run_ring_async_threads(
+    data: np.ndarray,
+    arities: np.ndarray,
+    edge_masks: np.ndarray,
+    config=None,
+    add_limit: Optional[int] = None,
+    max_rounds: int = 16,
+    speculation: int = 2,
+    die_member: Optional[int] = None,
+    die_after_round: Optional[int] = None,
+    hb_timeout_s: float = 2.0,
+    wall_limit_s: float = 300.0,
+) -> dict:
+    """The async ring with k members as THREADS of this process, exchanging
+    over localhost sockets — the same :func:`run_member` code path the
+    multi-process launcher runs, minus process isolation (ges_jit
+    compilations are shared, so this is also the cheap mode for tests and
+    benchmarks).  ``die_member``/``die_after_round`` inject a silent
+    failure to exercise the elastic path.  Returns per-member results plus
+    the lockstep-comparable aggregate (graphs/scores in ring order of the
+    surviving members, executed round count, and summed phase timings).
+    """
+    k = int(np.asarray(edge_masks).shape[0])
+    socks = _free_listeners(k)
+    peers = tuple((i, "127.0.0.1", s.getsockname()[1])
+                  for i, s in enumerate(socks))
+    results: Dict[int, dict] = {}
+    errors: List[BaseException] = []
+
+    def runner(i: int) -> None:
+        spec = AsyncRingSpec(
+            member_id=i, peers=peers, max_rounds=max_rounds,
+            speculation=speculation, hb_timeout_s=hb_timeout_s,
+            wall_limit_s=wall_limit_s,
+            die_after_round=(die_after_round if i == die_member else None),
+            die_hard=False)
+        try:
+            results[i] = run_member(data, arities, edge_masks, spec,
+                                    config=config, add_limit=add_limit,
+                                    listen_sock=socks[i])
+        except BaseException as e:          # surface thread crashes
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner, args=(i,), daemon=True)
+               for i in range(k)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=wall_limit_s + 30.0)
+    if errors:
+        raise errors[0]
+    survivors = [i for i in range(k)
+                 if i in results and not results[i].get("died")]
+    if not survivors:
+        raise RuntimeError("async ring: no surviving members reported")
+    rep = results[survivors[0]]
+    agg = {
+        "graphs": np.stack([results[i]["adj"] for i in survivors]),
+        "scores": np.array([results[i]["score"] for i in survivors]),
+        "rounds": int(max(results[i]["rounds"] for i in survivors)),
+        "live": rep["live"],
+        "members": results,
+        "survivors": survivors,
+        "timed_out": any(results[i]["timed_out"] for i in survivors),
+    }
+    agg["best_member"] = survivors[int(np.argmax(agg["scores"]))]
+    agg["best_adj"] = results[agg["best_member"]]["adj"]
+    agg["best_score"] = float(agg["scores"].max())
+    agg["n_score_evals"] = int(sum(results[i].get("n_score_evals", 0)
+                                   for i in results))
+    # lockstep-comparable per-round trace: max over surviving members of the
+    # score each posted for round r (only rounds the verdict protocol counted)
+    agg["ring_scores"] = [
+        max(results[i]["round_scores"][r] for i in survivors
+            if r in results[i]["round_scores"])
+        for r in range(agg["rounds"])
+        if any(r in results[i]["round_scores"] for i in survivors)]
+    # phase totals over surviving members (per-member lists kept too)
+    agg["phase_us"] = {
+        ph: {str(i): float(np.sum(results[i]["timings"][ph]))
+             for i in survivors}
+        for ph in ("wait_us", "fuse_us", "sweep_us")}
+    return agg

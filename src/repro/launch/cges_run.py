@@ -31,7 +31,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
 
 import numpy as np
@@ -41,6 +40,7 @@ from ..core import (DeviceFamilyCache, GESConfig, ScoreCache, bdeu, fusion,
 from ..core.cges import edge_add_limit
 from ..core.dag import smhd_np
 from ..data.bn import benchmark_bn, forward_sample
+from . import devices
 
 
 def ring_rounds(data, arities, edge_masks, config, add_limit, max_rounds,
@@ -179,27 +179,11 @@ def main():
         ap.error("--data-shards must be >= 1")
     # Device requirement: the compiled ring needs k devices on its ring
     # axis, times d when the data axis is on; the host engine needs d for
-    # its per-sweep data mesh.  XLA_FLAGS must be set before the backend
-    # initializes, which importing repro.core already did — so on a
-    # too-small platform we re-exec this driver once with forced host
-    # devices.
+    # its per-sweep data mesh (launch/devices.py re-execs once with forced
+    # host devices when the initialized platform is too small).
     need = (args.k * args.data_shards if args.engine == "ring"
             else args.data_shards)
-    if need > 1:
-        import jax
-
-        if len(jax.devices()) < need:
-            flags = os.environ.get("XLA_FLAGS", "")
-            if "host_platform_device_count" in flags:
-                raise SystemExit(
-                    f"--engine {args.engine} with k={args.k} "
-                    f"data_shards={args.data_shards} needs >= {need} "
-                    f"devices, found {len(jax.devices())}")
-            os.environ["XLA_FLAGS"] = (
-                flags + f" --xla_force_host_platform_device_count={need}"
-            ).strip()
-            os.execv(sys.executable, [sys.executable, "-m",
-                                      "repro.launch.cges_run"] + sys.argv[1:])
+    devices.force_host_devices_or_reexec(need, "repro.launch.cges_run")
 
     t0 = time.time()
     bn = benchmark_bn(args.family, scale=args.scale, seed=args.seed)
@@ -221,26 +205,16 @@ def main():
     ring_w = None
     ring_cache_stats = None
     if args.engine == "ring":
-        import jax
-        from jax.sharding import Mesh
         from ..core.ring import RingSpec, ring_cges
+        from .mesh import make_ring_data_mesh
 
-        devs = jax.devices()
         d = args.data_shards
-        if len(devs) < args.k * d:
-            raise SystemExit(
-                f"--engine ring needs >= k*d={args.k * d} devices, found "
-                f"{len(devs)} (XLA_FLAGS already initialized?)")
         pid_tables = partition.pid_tables(masks)
         ring_w = int(pid_tables.shape[2])
-        if d > 1:
-            mesh = Mesh(np.array(devs[:args.k * d]).reshape(args.k, d),
-                        ("ring", "data"))
-            spec = RingSpec(k=args.k, max_rounds=args.max_rounds,
-                            data_axis="data", data_axis_size=d)
-        else:
-            mesh = Mesh(np.array(devs[:args.k]), ("ring",))
-            spec = RingSpec(k=args.k, max_rounds=args.max_rounds)
+        mesh = make_ring_data_mesh(args.k, d)
+        spec = (RingSpec(k=args.k, max_rounds=args.max_rounds,
+                         data_axis="data", data_axis_size=d) if d > 1
+                else RingSpec(k=args.k, max_rounds=args.max_rounds))
         out_ring = ring_cges(
             data, bn.arities, masks, mesh, spec, config,
             add_limit=lim, pid_tables=pid_tables,

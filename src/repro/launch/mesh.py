@@ -30,3 +30,19 @@ def make_host_mesh(k: int = 1, axis: str = "ring"):
     """k-device 1-axis mesh from whatever devices exist (tests / cGES ring)."""
     devs = jax.devices()[:k]
     return jax.sharding.Mesh(np.asarray(devs, dtype=object).reshape(k), (axis,))
+
+
+def make_ring_data_mesh(k: int, d: int = 1):
+    """(k,) 'ring' mesh, or the 2-D (k, d) 'ring' x 'data' mesh the compiled
+    ring uses when the instance axis is sharded over d devices per member
+    (core/ring.RingSpec(data_axis=...)).  Needs k*d devices — force host
+    devices first (launch/devices.force_host_devices_or_reexec)."""
+    devs = jax.devices()
+    if len(devs) < k * d:
+        raise RuntimeError(
+            f"ring x data mesh needs k*d={k * d} devices, have {len(devs)}")
+    if d > 1:
+        return jax.sharding.Mesh(
+            np.asarray(devs[:k * d], dtype=object).reshape(k, d),
+            ("ring", "data"))
+    return make_host_mesh(k)

@@ -1,0 +1,252 @@
+"""The asynchronous double-buffered elastic ring (core/ring_async.py).
+
+Fast tier: frame/mailbox transport units, the threaded k-member ring pinned
+against the lockstep host oracle (healthy EXACT parity — speculative rounds
+never diverge because fuse/GES inputs don't depend on verdicts), the
+elastic kill-one-member path, and ``cges(engine="async")``.
+
+Slow tier (the dedicated CI leg runs these): the REAL multi-process
+launcher — 2 OS processes forming a ``jax.distributed`` cluster with
+seeded async-vs-lockstep score parity, and a 3-process kill-one-member
+drill (``os._exit(13)`` mid-run, jax.distributed OFF — its coordination
+service terminates surviving processes when a peer dies, which is exactly
+why the data plane is our own sockets; see the module docstring).
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import GESConfig, fusion, ges_host, partition
+from repro.core.ring_async import (Mailbox, recv_frame, run_ring_async_threads,
+                                   send_frame)
+from repro.data.bn import forward_sample, random_bn
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Transport units
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip():
+    a, b = socket.socketpair()
+    try:
+        payload = np.arange(64, dtype=np.int8).tobytes()
+        send_frame(a, {"t": "bn", "frm": 3, "round": 7, "score": -12.5},
+                   payload)
+        send_frame(a, {"t": "hb", "frm": 1})
+        f = b.makefile("rb")
+        h1, p1 = recv_frame(f)
+        h2, p2 = recv_frame(f)
+        assert h1["t"] == "bn" and h1["round"] == 7 and p1 == payload
+        assert h2 == {"t": "hb", "frm": 1} and p2 == b""
+    finally:
+        a.close()
+        b.close()
+
+
+def test_mailbox_double_buffer():
+    box = Mailbox()
+    stop = threading.Event()
+    g0 = np.zeros((3, 3), np.int8)
+    g1 = np.eye(3, dtype=np.int8)
+    box.put(0, (g0, -1.0, 0))
+    box.put(1, (g1, -2.0, 0))        # round t+1 buffered while t unconsumed
+    box.put(0, (g1, -9.0, 1))        # duplicate round: first write wins
+    got0 = box.get(0, stop, timeout=1.0)
+    got1 = box.get(1, stop, timeout=1.0)
+    assert got0[1] == -1.0 and np.array_equal(got0[0], g0)
+    assert got1[1] == -2.0
+    box.drop_below(5)
+    assert box.get(1, stop, timeout=0.05) is None
+
+
+# ---------------------------------------------------------------------------
+# Threaded ring vs the lockstep oracle
+# ---------------------------------------------------------------------------
+
+MAX_ROUNDS = 4
+
+
+def _problem(seed=2, n=8, m=400):
+    rng = np.random.default_rng(seed)
+    bn = random_bn(rng, n=n, n_edges=int(1.3 * n), max_parents=2)
+    data = forward_sample(bn, m, rng)
+    return bn, data
+
+
+def _host_ring(data, arities, masks, cfg, max_rounds=MAX_ROUNDS):
+    """Lockstep oracle: per-member keeps of the last globally-improving
+    round (the same rule as core/ring._ring_body and the async verdicts)."""
+    k, n, _ = masks.shape
+    graphs = [np.zeros((n, n), np.int8) for _ in range(k)]
+    best_g, best_s = list(graphs), [-np.inf] * k
+    best, go, rnd = -np.inf, True, 0
+    while go and rnd < max_rounds:
+        preds = [graphs[(i - 1) % k] for i in range(k)]
+        new_g, new_s = [], []
+        for i in range(k):
+            init = fusion.fusion_edge_union(
+                graphs[i], preds[i]).astype(np.int8)
+            res = ges_host(data, arities, init_adj=init, allowed=masks[i],
+                           config=cfg)
+            new_g.append(res.adj)
+            new_s.append(res.score)
+        graphs, rnd = new_g, rnd + 1
+        round_best = max(new_s)
+        go = round_best > best + cfg.tol
+        if go:
+            best_g, best_s = new_g, new_s
+        best = max(best, round_best)
+    return np.stack(best_g), np.array(best_s), rnd
+
+
+def test_async_threads_match_lockstep_oracle():
+    bn, data = _problem()
+    cfg = GESConfig(max_q=256, counts_impl="fused")
+    masks = partition.partition_edges(data, bn.arities, 2)
+    out = run_ring_async_threads(data, bn.arities, masks, config=cfg,
+                                 max_rounds=MAX_ROUNDS, wall_limit_s=240.0)
+    gH, sH, rH = _host_ring(data, bn.arities, masks, cfg)
+    assert not out["timed_out"]
+    assert out["rounds"] == rH
+    assert np.array_equal(out["graphs"], gH)
+    assert np.allclose(out["scores"], sH, rtol=1e-5, atol=1e-2)
+    # the overlap claim: blocked-wait is a sliver of sweep time per member
+    for i in out["survivors"]:
+        t = out["members"][i]["timings"]
+        assert np.sum(t["wait_us"]) < 0.5 * np.sum(t["sweep_us"])
+
+
+def test_async_threads_elastic_kill_one_member():
+    bn, data = _problem(seed=3, n=8)
+    cfg = GESConfig(max_q=256, counts_impl="fused")
+    masks = partition.partition_edges(data, bn.arities, 3)
+    out = run_ring_async_threads(
+        data, bn.arities, masks, config=cfg, max_rounds=6,
+        die_member=1, die_after_round=1, hb_timeout_s=1.5,
+        wall_limit_s=240.0)
+    assert not out["timed_out"]
+    assert out["survivors"] == [0, 2]
+    assert out["live"] == [0, 2]
+    assert np.isfinite(out["best_score"])
+    # both survivors recorded the death (one by heartbeat, one by gossip)
+    for i in out["survivors"]:
+        assert [d["victim"] for d in out["members"][i]["deaths"]] == [1]
+    # the dead member's E_1 was folded into its ring predecessor: member
+    # 0's final restricted width covers the union, so the subsets the
+    # survivors swept stay a complete cover of the original partition
+    vias = {d["via"] for i in out["survivors"]
+            for d in out["members"][i]["deaths"]}
+    assert "heartbeat" in vias
+
+
+def test_cges_async_engine_matches_jax_engine():
+    from repro.core import cges
+
+    bn, data = _problem()
+    cfg = GESConfig(max_q=256, counts_impl="fused")
+    masks = partition.partition_edges(data, bn.arities, 2)
+    r_async = cges(data, bn.arities, k=2, limit=False, config=cfg,
+                   engine="async", max_rounds=MAX_ROUNDS, edge_masks=masks)
+    r_jax = cges(data, bn.arities, k=2, limit=False, config=cfg,
+                 engine="jax", max_rounds=MAX_ROUNDS, edge_masks=masks)
+    assert r_async.rounds == r_jax.rounds
+    assert np.array_equal(r_async.adj, r_jax.adj)
+    assert abs(r_async.score - r_jax.score) <= 1e-3
+    assert np.allclose(r_async.ring_scores, r_jax.ring_scores, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Multi-process launcher (the CI ring-async leg runs these)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_two_process_jax_distributed_parity():
+    """2 OS processes form a jax.distributed cluster (bootstrap) and run
+    the async ring over the socket data plane; final best score must match
+    the single-process lockstep oracle within tol on the seeded problem."""
+    code = textwrap.dedent("""
+        import os
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np
+        from repro.core import GESConfig, partition
+        from repro.launch.ring_async_run import launch_ring
+        from tests.test_ring_async import _host_ring, _problem
+
+        bn, data = _problem()
+        cfg_kw = dict(max_q=256, counts_impl="fused")
+        masks = partition.partition_edges(data, bn.arities, 2)
+        agg = launch_ring(data, bn.arities, masks, config_kwargs=cfg_kw,
+                          max_rounds=4, wall_limit_s=240.0,
+                          jax_distributed=True, verbose=False)
+        gH, sH, rH = _host_ring(data, bn.arities, masks,
+                                GESConfig(**cfg_kw))
+        assert agg["survivors"] == [0, 1], agg["exit_codes"]
+        assert not agg["timed_out"]
+        assert agg["rounds"] == rH, (agg["rounds"], rH)
+        assert np.array_equal(agg["graphs"], gH)
+        assert abs(agg["best_score"] - sH.max()) <= 1e-2
+        print("PROC_PARITY_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, cwd=REPO,
+                       env={**os.environ, "PYTHONPATH": "src"})
+    assert "PROC_PARITY_OK" in r.stdout, r.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_three_process_kill_one_member():
+    """One of 3 OS processes hard-exits (os._exit(13)) after round 1; the
+    survivors must detect it, re-partition its edge subset, re-stitch the
+    ring and converge.  jax.distributed stays OFF here — its coordination
+    service terminates surviving processes when a peer dies."""
+    code = textwrap.dedent("""
+        import os
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np
+        from repro.core import partition
+        from repro.launch.ring_async_run import launch_ring
+        from tests.test_ring_async import _problem
+
+        bn, data = _problem(seed=3)
+        masks = partition.partition_edges(data, bn.arities, 3)
+        agg = launch_ring(data, bn.arities, masks,
+                          config_kwargs=dict(max_q=256,
+                                             counts_impl="fused"),
+                          max_rounds=6, hb_timeout_s=2.0,
+                          wall_limit_s=240.0, die_member=1,
+                          die_after_round=1, verbose=False)
+        assert agg["exit_codes"][1] == 13, agg["exit_codes"]
+        assert agg["survivors"] == [0, 2], agg["exit_codes"]
+        assert agg["live"] == [0, 2]
+        assert not agg["timed_out"]
+        assert np.isfinite(agg["best_score"])
+        for i in agg["survivors"]:
+            deaths = agg["members"][i]["deaths"]
+            assert [d["victim"] for d in deaths] == [1], (i, deaths)
+        print("PROC_ELASTIC_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, cwd=REPO,
+                       env={**os.environ, "PYTHONPATH": "src"})
+    assert "PROC_ELASTIC_OK" in r.stdout, r.stderr[-3000:]
+
+
+def test_launch_ring_rejects_kill_drill_with_jax_distributed():
+    with pytest.raises(ValueError, match="coordination service"):
+        from repro.launch.ring_async_run import launch_ring
+        launch_ring(np.zeros((4, 2), np.int64), np.array([2, 2]),
+                    np.zeros((2, 2, 2), bool), config_kwargs={},
+                    jax_distributed=True, die_member=0, die_after_round=0)

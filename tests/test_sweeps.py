@@ -453,3 +453,91 @@ def test_ring_cges_trajectory_invariance():
                        cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
     assert "RING_OK" in r.stdout, r.stderr[-3000:]
+
+
+def test_ring_cges_trajectory_k3_k4():
+    """ppermute neighbor wiring on non-trivial cycles: k in {3, 4} rings
+    (odd and larger-even), pinned against the host-engine oracle, with the
+    restricted W-wide pid_table path and the persistent family cache each
+    exercised on the multi-hop cycle (subprocess: forced host devices).
+
+    max_q=256 keeps every fused-init family under the compiled-table guard
+    for these seeds: when the guard bites a base family but not its
+    reduced families, host and compiled BES legitimately diverge (see
+    bdeu.graph_score_jax) and the cross-engine pin would be vacuous."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import GESConfig, fusion, ges_host, partition
+        from repro.core.ring import RingSpec, ring_cges
+        from repro.data.bn import forward_sample, random_bn
+
+        rng = np.random.default_rng(5)
+        bn = random_bn(rng, n=9, n_edges=11, max_parents=2)
+        data = forward_sample(bn, 400, rng)
+        n = bn.n
+        MAX_ROUNDS = 3
+
+        def host_ring(masks, k, cfg):
+            graphs = [np.zeros((n, n), np.int8) for _ in range(k)]
+            best_g, best_s = list(graphs), [-np.inf] * k
+            best, go, rnd = -np.inf, True, 0
+            while go and rnd < MAX_ROUNDS:
+                preds = [graphs[(i - 1) % k] for i in range(k)]
+                new_g, new_s = [], []
+                for i in range(k):
+                    init = fusion.fusion_edge_union(
+                        graphs[i], preds[i]).astype(np.int8)
+                    res = ges_host(data, bn.arities, init_adj=init,
+                                   allowed=masks[i], config=cfg)
+                    new_g.append(res.adj); new_s.append(res.score)
+                graphs, rnd = new_g, rnd + 1
+                round_best = max(new_s)
+                go = round_best > best + cfg.tol
+                if go:
+                    best_g, best_s = new_g, new_s
+                best = max(best, round_best)
+            return np.stack(best_g), np.array(best_s), rnd
+
+        for k, impl in ((3, "segment"), (4, "fused")):
+            masks = partition.partition_edges(data, bn.arities, k)
+            mesh = Mesh(np.array(jax.devices()[:k]), ("ring",))
+            spec = RingSpec(k=k, max_rounds=MAX_ROUNDS)
+            cfg = GESConfig(max_q=256, counts_impl=impl)
+            # restricted (W-wide pid_table) vs full-n on the k-cycle
+            gW, sW, rW = ring_cges(data, bn.arities, masks, mesh,
+                                   spec, cfg, restricted=True)
+            gF, sF, rF = ring_cges(data, bn.arities, masks, mesh,
+                                   spec, cfg, restricted=False)
+            assert np.array_equal(gW, gF), (k, "W vs full-n")
+            assert np.allclose(sW, sF, rtol=1e-6), (k,)
+            assert rW == rF, (k,)
+            # persistent family cache on the multi-hop cycle: bitwise pin
+            cfg_fc = GESConfig(max_q=256, counts_impl=impl,
+                               family_cache=True)
+            gC, sC, rC, stats = ring_cges(data, bn.arities, masks, mesh,
+                                          spec, cfg_fc, restricted=True,
+                                          return_cache_stats=True)
+            assert np.array_equal(gC, gW), (k, "family-cache drift")
+            assert np.allclose(sC, sW, rtol=1e-6), (k,)
+            assert rC == rW, (k,)
+            # host-engine oracle: the cycle's one-hop information flow
+            gH, sH, rH = host_ring(masks, k,
+                                   GESConfig(max_q=256,
+                                             counts_impl="segment"))
+            assert np.array_equal(gW, gH), (k, "vs host oracle")
+            assert np.allclose(sW, sH, rtol=1e-5, atol=1e-2), (k,)
+            assert rW == rH, (k,)
+            assert gW.any()
+        print("RING_K34_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "RING_K34_OK" in r.stdout, r.stderr[-3000:]
