@@ -1,0 +1,58 @@
+"""Finding model shared by every analysis pass.
+
+A finding is one violation of a machine-enforced invariant: a lint rule hit
+(``R0xx``), a trace-contract breach (``C0xx``) or a VMEM budget overflow
+(``V0xx``).  Findings serialize to the ``--json`` report and drive the CLI
+exit code (any finding => nonzero), so CI can gate on them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                 # "R001" | ... | "C001" | ... | "V001"
+    path: str                 # file (lint) or program name (contracts/vmem)
+    line: int                 # 1-based source line; 0 when not file-anchored
+    message: str
+    snippet: Optional[str] = None   # the offending source line, stripped
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: {self.rule} {self.message}"
+        if self.snippet:
+            out += f"\n    {self.snippet}"
+        return out
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Report:
+    """Aggregated result of the passes that actually ran."""
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    # Pass-specific informational payloads (psum counts, retrace counters,
+    # per-kernel VMEM footprints) — recorded even when everything passes so
+    # the JSON report doubles as a budget/contract snapshot.
+    info: dict = dataclasses.field(default_factory=dict)
+    passes_run: List[str] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: List[Finding]) -> None:
+        self.findings.extend(findings)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "passes_run": self.passes_run,
+            "n_findings": len(self.findings),
+            "findings": [f.to_dict() for f in self.findings],
+            "info": self.info,
+        }, indent=2, sort_keys=True)

@@ -1,0 +1,346 @@
+"""Pass 1 — repo-specific AST lint.
+
+Four rules, each encoding a bug class this repo has actually shipped and
+fixed at least once (see ``repro.analysis`` package docstring for the full
+catalog with PR references):
+
+* **R001** — import-time ``os.environ`` reads of ``REPRO_*`` / ``RING_*``
+  config names at module level.  Env-driven config must be read at call
+  time (function body, or a ``default_factory`` lambda) so setting the
+  variable after ``import repro`` is honoured.
+* **R002** — bare ``assert`` validating caller-supplied values in
+  ``core/``, ``kernels/`` or ``models/``.  Asserts vanish under
+  ``python -O``; shape/divisibility contracts must raise ``ValueError``.
+* **R003** — class-body defaults (dataclass fields or plain class
+  attributes) whose default expression reads the environment — the value
+  binds once at class creation, silently freezing the env.
+* **R004** — engine/backend dispatch chains (>= 2 ``X == "literal"``
+  branches on a ``counts_impl`` / ``engine`` / ``impl``-style variable)
+  whose final ``else`` silently falls through instead of raising, in a
+  function with no up-front validator call (``check_*`` / ``single_impl``
+  / ``resolve_*``).
+
+Suppression: append ``# repro: allow=R002`` (comma-separated rule ids, or
+``allow=all``) to the flagged line or the line directly above it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Set
+
+from .findings import Finding
+
+ENV_NAME_RE = re.compile(r"^(REPRO_|RING_)")
+DISPATCH_VAR_RE = re.compile(
+    r"(counts_impl|fusion_engine|engine|impl|backend)$")
+VALIDATOR_RE = re.compile(r"^_?(check_\w+|single_impl|resolve_\w+)$")
+SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow=([A-Za-z0-9,_ ]+)")
+
+# R002 applies to the packages whose entry points take caller-supplied
+# shapes/ids; launch/ and benchmark drivers may assert on their own state.
+R002_PACKAGES = ("core", "kernels", "models")
+
+RULES = ("R001", "R002", "R003", "R004")
+
+
+def _suppressed(lines: Sequence[str], lineno: int) -> Set[str]:
+    """Rule ids allowed at 1-based ``lineno`` (same line or the line above)."""
+    out: Set[str] = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = SUPPRESS_RE.search(lines[ln - 1])
+            if m:
+                out |= {t.strip().upper() for t in m.group(1).split(",")}
+    return out
+
+
+def _env_read_key(node: ast.AST) -> Optional[str]:
+    """The env-var name if ``node`` is an environment READ, else None.
+
+    Matches ``os.environ.get(k, ...)``, ``os.getenv(k, ...)`` and
+    ``os.environ[k]`` in Load context.  Writes (``os.environ[k] = v``) are
+    not reads — the launch/ modules mutate XLA_FLAGS legitimately.
+    Returns "" when the read's key is not a string literal (unknown name).
+    """
+    def attr_is(n, *path):
+        for name in reversed(path[1:]):
+            if not (isinstance(n, ast.Attribute) and n.attr == name):
+                return False
+            n = n.value
+        return isinstance(n, ast.Name) and n.id == path[0]
+
+    key_node = None
+    if isinstance(node, ast.Call):
+        if attr_is(node.func, "os", "environ", "get") or \
+                attr_is(node.func, "os", "getenv"):
+            key_node = node.args[0] if node.args else None
+        else:
+            return None
+    elif isinstance(node, ast.Subscript) and \
+            isinstance(node.ctx, ast.Load) and \
+            attr_is(node.value, "os", "environ"):
+        key_node = node.slice
+    else:
+        return None
+    if isinstance(key_node, ast.Constant) and isinstance(key_node.value, str):
+        return key_node.value
+    return ""
+
+
+def _import_time_env_reads(root: ast.AST, include_self: bool = True):
+    """(node, key) env reads in ``root`` that execute at import time.
+
+    Function/lambda BODIES are call-time and skipped; function decorators
+    and argument defaults evaluate at def time and are scanned.  Class
+    bodies are scanned too (callers scope them to R001 vs R003).
+    """
+    out = []
+
+    def walk(node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in node.decorator_list + node.args.defaults + \
+                    [d for d in node.args.kw_defaults if d is not None]:
+                walk(sub)
+            return              # the body is call-time context
+        if isinstance(node, ast.Lambda):
+            return              # call-time context — the default_factory idiom
+        key = _env_read_key(node)
+        if key is not None:
+            out.append((node, key))
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    if include_self:
+        walk(root)
+    else:
+        for child in ast.iter_child_nodes(root):
+            walk(child)
+    return out
+
+
+class _Linter:
+    def __init__(self, source: str, path: str, rules: Iterable[str]):
+        self.source = source
+        self.path = path
+        self.lines = source.splitlines()
+        self.rules = set(rules)
+        self.findings: List[Finding] = []
+
+    def report(self, rule: str, node: ast.AST, message: str) -> None:
+        lineno = getattr(node, "lineno", 0)
+        allowed = _suppressed(self.lines, lineno)
+        if rule in self.rules and rule not in allowed and "ALL" not in allowed:
+            snippet = (self.lines[lineno - 1].strip()
+                       if 1 <= lineno <= len(self.lines) else None)
+            self.findings.append(
+                Finding(rule, self.path, lineno, message, snippet))
+
+    # ---- R001: import-time env reads of repo config names ---------------
+
+    def check_r001(self, tree: ast.Module) -> None:
+        for node in ast.iter_child_nodes(tree):
+            if isinstance(node, ast.ClassDef):
+                continue        # class bodies are R003's scope
+            for read, key in _import_time_env_reads(node):
+                if ENV_NAME_RE.match(key or ""):
+                    self.report(
+                        "R001", read,
+                        f"import-time os.environ read of {key!r}: the value "
+                        f"binds at `import repro` and setting the variable "
+                        f"afterwards is silently ignored — read it at call "
+                        f"time (function body / default_factory), like "
+                        f"GESConfig.counts_impl")
+
+    # ---- R003: class-creation-time env capture in defaults ---------------
+
+    def check_r003(self, tree: ast.Module) -> None:
+        for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+            for stmt in cls.body:
+                value = None
+                if isinstance(stmt, ast.AnnAssign):
+                    value = stmt.value
+                elif isinstance(stmt, ast.Assign):
+                    value = stmt.value
+                if value is None:
+                    continue
+                for read, key in _import_time_env_reads(value):
+                    self.report(
+                        "R003", read,
+                        f"class-body default reads os.environ"
+                        f"{f' ({key!r})' if key else ''}: the env state is "
+                        f"captured once at class creation — use "
+                        f"dataclasses.field(default_factory=lambda: ...) so "
+                        f"each instantiation re-reads it")
+
+    # ---- R002: bare asserts on caller-supplied values ---------------------
+
+    def _tainted_names(self, fn: ast.FunctionDef) -> Set[str]:
+        """Parameter names plus locals (transitively) derived from them."""
+        args = fn.args
+        tainted: Set[str] = {
+            a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)}
+        for extra in (args.vararg, args.kwarg):
+            if extra is not None:
+                tainted.add(extra.arg)
+
+        def names_in(node) -> Set[str]:
+            return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+        def visit_assigns(node):
+            changed = False
+            for stmt in ast.walk(node):
+                targets = []
+                if isinstance(stmt, ast.Assign):
+                    targets, value = stmt.targets, stmt.value
+                elif isinstance(stmt, ast.AnnAssign) and stmt.value:
+                    targets, value = [stmt.target], stmt.value
+                else:
+                    continue
+                if not names_in(value) & tainted:
+                    continue
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and n.id not in tainted:
+                            tainted.add(n.id)
+                            changed = True
+            return changed
+
+        while visit_assigns(fn):    # fixed point; function bodies are tiny
+            pass
+        return tainted
+
+    def check_r002(self, tree: ast.Module) -> None:
+        parts = Path(self.path).parts
+        if not any(p in parts for p in R002_PACKAGES):
+            return
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+            tainted = self._tainted_names(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Assert):
+                    continue
+                used = {n.id for n in ast.walk(node.test)
+                        if isinstance(n, ast.Name)}
+                if used & tainted:
+                    self.report(
+                        "R002", node,
+                        f"bare assert validates caller-supplied values "
+                        f"({', '.join(sorted(used & tainted))}) in "
+                        f"{fn.name}(): asserts vanish under `python -O` — "
+                        f"raise ValueError with a named message instead")
+
+    # ---- R004: silent engine-dispatch fallthrough -------------------------
+
+    @staticmethod
+    def _chain_var(test: ast.AST) -> Optional[str]:
+        """Dispatch variable name if ``test`` is ``X == "lit"`` or
+        ``X in ("lit", ...)`` on a plain Name; else None."""
+        if not (isinstance(test, ast.Compare) and len(test.ops) == 1
+                and isinstance(test.left, ast.Name)):
+            return None
+        op, comp = test.ops[0], test.comparators[0]
+        if isinstance(op, ast.Eq):
+            ok = isinstance(comp, ast.Constant) and \
+                isinstance(comp.value, str)
+        elif isinstance(op, ast.In):
+            ok = isinstance(comp, (ast.Tuple, ast.List, ast.Set)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in comp.elts)
+        else:
+            ok = False
+        return test.left.id if ok else None
+
+    @staticmethod
+    def _has_validator_call(scope: ast.AST) -> bool:
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Call):
+                fname = None
+                if isinstance(node.func, ast.Name):
+                    fname = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    fname = node.func.attr
+                if fname and VALIDATOR_RE.match(fname):
+                    return True
+        return False
+
+    def check_r004(self, tree: ast.Module) -> None:
+        # map each If to its parent so elif links aren't double-counted
+        elif_children = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.If) and len(node.orelse) == 1 and \
+                    isinstance(node.orelse[0], ast.If):
+                elif_children.add(id(node.orelse[0]))
+        # nearest top-level function scope for validator lookups
+        scopes = {}
+
+        def assign_scope(node, scope):
+            for child in ast.iter_child_nodes(node):
+                s = scope
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    s = scope if scope is not None else child
+                scopes[id(child)] = s
+                assign_scope(child, s)
+
+        assign_scope(tree, None)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.If) or id(node) in elif_children:
+                continue
+            var = self._chain_var(node.test)
+            if var is None or not DISPATCH_VAR_RE.search(var):
+                continue
+            # walk the elif ladder
+            chain, cur = [node], node
+            while len(cur.orelse) == 1 and isinstance(cur.orelse[0], ast.If):
+                nxt = cur.orelse[0]
+                if self._chain_var(nxt.test) != var:
+                    break
+                chain.append(nxt)
+                cur = nxt
+            if len(chain) < 2:
+                continue        # single-branch ifs are not dispatch chains
+            tail = chain[-1].orelse
+            if tail and any(isinstance(s, ast.Raise) for s in tail):
+                continue        # loud fallthrough — exactly what we want
+            scope = scopes.get(id(node))
+            if scope is not None and self._has_validator_call(scope):
+                continue        # values pre-validated (check_*/single_impl)
+            self.report(
+                "R004", node,
+                f"dispatch chain on {var!r} "
+                f"{'has a silent else' if tail else 'has no else'}: an "
+                f"unknown value silently runs the fallback backend (the "
+                f"pre-PR 3 counts_impl bug) — raise ValueError in the else "
+                f"or validate {var!r} up front (check_* / single_impl)")
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules: Iterable[str] = RULES) -> List[Finding]:
+    """Lint one source text; ``path`` anchors findings and scopes R002."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("R000", path, e.lineno or 0,
+                        f"syntax error: {e.msg}")]
+    linter = _Linter(source, path, rules)
+    linter.check_r001(tree)
+    linter.check_r002(tree)
+    linter.check_r003(tree)
+    linter.check_r004(tree)
+    linter.findings.sort(key=lambda f: (f.line, f.rule))
+    return linter.findings
+
+
+def lint_paths(paths: Iterable[str],
+               rules: Iterable[str] = RULES) -> List[Finding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    findings: List[Finding] = []
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            findings.extend(
+                lint_source(f.read_text(encoding="utf-8"), str(f), rules))
+    return findings

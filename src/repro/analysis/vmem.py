@@ -1,0 +1,247 @@
+"""Pass 3 — symbolic VMEM budgets for the Pallas kernels.
+
+A TPU core has ~16 MiB of VMEM.  Every Pallas kernel in this repo keeps an
+accumulator (or running state) resident in VMEM across a sequential grid,
+plus per-step input blocks and in-kernel one-hot/softmax temporaries — and
+nothing checks that a (tile, max_q, r_pad) configuration actually fits
+until the TPU compiler rejects it at paper scale (n = 1041 / max_q = 4096
+is exactly where it gets tight).  This pass computes the footprint
+symbolically from the same parameters the kernels take, so an over-budget
+configuration fails at analysis time, with a per-term breakdown instead of
+a compiler error.
+
+Model (documented heuristic, deliberately conservative):
+
+* input/output blocks whose BlockSpec index map depends on a grid axis are
+  counted twice (Pallas pipelines them double-buffered); blocks with a
+  constant index map (revisited accumulators) are counted once;
+* ``scratch_shapes`` count once;
+* named in-kernel temporaries (the one-hot slabs, the (BQ, BK) logits/probs
+  pair, the scatter-by-matmul chunk) count once each — these are the terms
+  that actually dominate (a (256, 4096) one-hot is 4 MiB).
+
+The four kernels and their repo-default paper-scale configurations are
+tabulated in ``DEFAULT_CONFIGS`` (tile defaults from the ops wrappers;
+max_q / r_pad / k_pad at the GESConfig defaults and munin-scale n).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .findings import Finding
+
+MIB = 2 ** 20
+# Per-core VMEM by platform.  v4/v5e/v5p are all ~16 MiB-class; "tpu" is
+# the default gate.  A deliberately generous "interpret" budget exists so
+# CPU-interpret runs (which have no real VMEM) can still exercise the gate.
+VMEM_BUDGETS: Dict[str, int] = {
+    "tpu": 16 * MIB,
+    "tpu_v4": 16 * MIB,
+    "tpu_v5e": 16 * MIB,
+    "tpu_v5p": 16 * MIB,
+}
+DEFAULT_BUDGET = VMEM_BUDGETS["tpu"]
+
+F32 = 4
+I32 = 4
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Term:
+    name: str
+    shape: Tuple[int, ...]
+    elem_bytes: int = F32
+    buffers: int = 1         # 2 = double-buffered streaming block
+
+    @property
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * self.elem_bytes * self.buffers
+
+
+@dataclasses.dataclass
+class Footprint:
+    kernel: str
+    params: Dict[str, int]
+    terms: List[Term]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(t.nbytes for t in self.terms)
+
+    def check(self, budget: int = DEFAULT_BUDGET) -> Optional[Finding]:
+        if self.total_bytes <= budget:
+            return None
+        top = sorted(self.terms, key=lambda t: -t.nbytes)[:3]
+        detail = ", ".join(
+            f"{t.name}{list(t.shape)}x{t.buffers}={t.nbytes / MIB:.1f}MiB"
+            for t in top)
+        return Finding(
+            "V001", self.kernel, 0,
+            f"VMEM footprint {self.total_bytes / MIB:.1f} MiB exceeds the "
+            f"{budget / MIB:.0f} MiB budget with {self.params} — dominant "
+            f"terms: {detail}; shrink the tile/chunk parameters")
+
+    def to_dict(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "params": self.params,
+            "total_bytes": self.total_bytes,
+            "total_mib": round(self.total_bytes / MIB, 3),
+            "terms": {t.name: t.nbytes for t in self.terms},
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel symbolic footprints (mirror the kernels' BlockSpecs/scratch)
+# ---------------------------------------------------------------------------
+
+def bdeu_count_footprint(*, max_q: int = 4096, r_pad: int = 128,
+                         tile_m: int = 256) -> Footprint:
+    """kernels/bdeu_count: one-hot contraction, (max_q, r_pad) accumulator
+    revisited across the sequential m grid."""
+    return Footprint("bdeu_count", dict(max_q=max_q, r_pad=r_pad,
+                                        tile_m=tile_m), [
+        Term("in:cfg", (tile_m,), I32, buffers=2),
+        Term("in:child", (tile_m,), I32, buffers=2),
+        Term("out:counts", (max_q, r_pad), F32),          # constant index map
+        Term("tmp:oh_cfg", (tile_m, max_q), F32),
+        Term("tmp:oh_child", (tile_m, r_pad), F32),
+    ])
+
+
+def bdeu_sweep_footprint(*, max_q: int = 4096, r_max: int = 8,
+                         tile_m: int = 256, tile_n: int = 32) -> Footprint:
+    """kernels/bdeu_sweep.sweep_counts: joint child-value-batched insert
+    sweep; the (max_q, tile_n * r_max) accumulator block rides the (b, c)
+    grid axes (double-buffered), revisited across m innermost."""
+    return Footprint("bdeu_sweep", dict(max_q=max_q, r_max=r_max,
+                                        tile_m=tile_m, tile_n=tile_n), [
+        Term("in:cfg", (tile_m,), I32, buffers=2),
+        Term("in:child", (tile_m,), I32, buffers=2),
+        Term("in:data", (tile_m, tile_n), I32, buffers=2),
+        Term("out:counts", (max_q, tile_n * r_max), F32, buffers=2),
+        Term("tmp:oh_cfg", (tile_m, max_q), F32),
+        Term("tmp:oh_all", (tile_m, tile_n * r_max), F32),
+    ])
+
+
+def bdeu_delete_footprint(*, max_q: int = 4096, r_pad: int = 128,
+                          tile_m: int = 256, k_pad: int = 1152,
+                          n_slots: int = 11,
+                          chunk_q: Optional[int] = None) -> Footprint:
+    """kernels/bdeu_sweep.delete_scores: VMEM-resident family table +
+    in-VMEM scatter-by-matmul marginalization (PR 5).  ``chunk_q`` defaults
+    to the kernel's own min(max_q, 256) bound; k_pad = round_up(n | W, 128);
+    n_slots <= floor(log2(max_q))."""
+    cq = min(max_q, 256) if chunk_q is None else chunk_q
+    return Footprint("bdeu_delete", dict(max_q=max_q, r_pad=r_pad,
+                                         tile_m=tile_m, k_pad=k_pad,
+                                         n_slots=n_slots, chunk_q=cq), [
+        Term("in:cfg", (tile_m,), I32, buffers=2),
+        Term("in:child", (tile_m,), I32, buffers=2),
+        Term("in:cand+slots", (k_pad + 3 * n_slots + 2,), I32),
+        Term("out:scores", (k_pad,), F32),
+        Term("scratch:family_table", (max_q, r_pad), F32),
+        Term("tmp:oh_cfg", (tile_m, max_q), F32),
+        Term("tmp:oh_child", (tile_m, r_pad), F32),
+        Term("tmp:scatter_onehot", (cq, max_q), F32),
+        Term("tmp:marginal_acc", (max_q, r_pad), F32),
+        Term("tmp:chunk_rows", (cq, r_pad), F32),
+    ])
+
+
+def flash_attention_footprint(*, block_q: int = 128, block_k: int = 128,
+                              head_dim: int = 128) -> Footprint:
+    """kernels/flash_attention: online-softmax attention; q/out blocks ride
+    the query grid, k/v the (sequential) KV grid, stats persist in scratch."""
+    return Footprint("flash_attention", dict(block_q=block_q,
+                                             block_k=block_k,
+                                             head_dim=head_dim), [
+        Term("in:q", (block_q, head_dim), F32, buffers=2),
+        Term("in:k", (block_k, head_dim), F32, buffers=2),
+        Term("in:v", (block_k, head_dim), F32, buffers=2),
+        Term("out:o", (block_q, head_dim), F32, buffers=2),
+        Term("scratch:acc", (block_q, head_dim), F32),
+        Term("scratch:m", (block_q, 128), F32),
+        Term("scratch:l", (block_q, 128), F32),
+        Term("tmp:logits", (block_q, block_k), F32),
+        Term("tmp:probs", (block_q, block_k), F32),
+    ])
+
+
+def ssd_scan_footprint(*, chunk: int = 128, head_dim_p: int = 64,
+                       state_n: int = 128) -> Footprint:
+    """kernels/ssd_scan: Mamba2 chunked scan; (N, P) state in scratch,
+    chunk-local quadratic decay mask as the dominant temporary."""
+    return Footprint("ssd_scan", dict(chunk=chunk, head_dim_p=head_dim_p,
+                                      state_n=state_n), [
+        Term("in:x", (chunk, head_dim_p), F32, buffers=2),
+        Term("in:a", (chunk,), F32, buffers=2),
+        Term("in:b", (chunk, state_n), F32, buffers=2),
+        Term("in:c", (chunk, state_n), F32, buffers=2),
+        Term("out:y", (chunk, head_dim_p), F32, buffers=2),
+        Term("scratch:state", (state_n, head_dim_p), F32),
+        Term("tmp:decay_mask", (chunk, chunk), F32),
+        Term("tmp:cb", (chunk, chunk), F32),
+        Term("tmp:y_intra+inter", (2 * chunk, head_dim_p), F32),
+        Term("tmp:w", (chunk, state_n), F32),
+    ])
+
+
+KERNEL_FOOTPRINTS: Dict[str, Callable[..., Footprint]] = {
+    "bdeu_count": bdeu_count_footprint,
+    "bdeu_sweep": bdeu_sweep_footprint,
+    "bdeu_delete": bdeu_delete_footprint,
+    "flash_attention": flash_attention_footprint,
+    "ssd_scan": ssd_scan_footprint,
+}
+
+# Paper-scale representative configurations: GESConfig.max_q = 4096, the
+# compiled r_pad = round_up(r_max, 128) = 128, munin-scale candidate column
+# k_pad = round_up(1041, 128) = 1152, tiles at the ops-wrapper defaults.
+DEFAULT_CONFIGS: Dict[str, Dict[str, int]] = {
+    "bdeu_count": dict(max_q=4096, r_pad=128, tile_m=256),
+    "bdeu_sweep": dict(max_q=4096, r_max=8, tile_m=256, tile_n=32),
+    "bdeu_delete": dict(max_q=4096, r_pad=128, tile_m=256,
+                        k_pad=_round_up(1041, 128), n_slots=11),
+    "flash_attention": dict(block_q=128, block_k=128, head_dim=128),
+    "ssd_scan": dict(chunk=128, head_dim_p=64, state_n=128),
+}
+
+
+def footprint(kernel: str, **params) -> Footprint:
+    if kernel not in KERNEL_FOOTPRINTS:
+        raise ValueError(f"unknown kernel {kernel!r}; valid: "
+                         f"{sorted(KERNEL_FOOTPRINTS)}")
+    return KERNEL_FOOTPRINTS[kernel](**params)
+
+
+def check_config(kernel: str, budget: int = DEFAULT_BUDGET,
+                 **params) -> Optional[Finding]:
+    """Budget-gate one kernel configuration; None when it fits."""
+    return footprint(kernel, **params).check(budget)
+
+
+def run_vmem_checks(budget: int = DEFAULT_BUDGET,
+                    configs: Optional[Dict[str, Dict[str, int]]] = None):
+    """Footprint every kernel at its (default or given) configuration.
+
+    Returns ``(findings, info)`` — info carries the full per-term breakdown
+    for the JSON report (the budget table in the package docstring is
+    generated from exactly this)."""
+    configs = DEFAULT_CONFIGS if configs is None else configs
+    findings: List[Finding] = []
+    info = {"budget_bytes": budget, "kernels": {}}
+    for kernel, params in configs.items():
+        fp = footprint(kernel, **params)
+        info["kernels"][kernel] = fp.to_dict()
+        bad = fp.check(budget)
+        if bad is not None:
+            findings.append(bad)
+    return findings, info

@@ -101,6 +101,12 @@ def cges(
     t0 = time.perf_counter()
     m, n = data.shape
     k = int(k)
+    if engine not in ("host", "jax", "async"):
+        # Validate up front: an unknown engine used to silently run the host
+        # path (the pre-PR 3 counts_impl fallthrough bug, lint rule R004).
+        raise ValueError(
+            f"cges: unknown engine {engine!r} "
+            f"(valid: 'host', 'jax', 'async')")
     # built per call, not bound at import — honours REPRO_COUNTS_IMPL set
     # after ``import repro`` (see GESConfig.counts_impl)
     config = config if config is not None else GESConfig()

@@ -198,7 +198,7 @@ def partition_edges(
         sims = bdeu.pairwise_similarity_np(data, arities, ess)
     elif engine == "fast":
         sims = bdeu.pairwise_similarity_fast(data, arities, ess)
-    else:
+    elif engine == "jax":
         r_max = int(arities.max())
         sims = np.asarray(
             bdeu.pairwise_similarity_jax(
@@ -207,5 +207,9 @@ def partition_edges(
                 ess, r_max,
             )
         )
+    else:
+        raise ValueError(
+            f"partition_edges: unknown engine {engine!r} "
+            f"(valid: 'host', 'fast', 'jax')")
     clusters = variable_clusters(sims, k)
     return edge_subsets(clusters, n)

@@ -74,11 +74,18 @@ from . import fusion, partition
 
 NEG = float("-inf")
 _LEN = struct.Struct(">I")
-_DEBUG = bool(int(os.environ.get("RING_ASYNC_DEBUG", "0")))
+
+
+def _debug_enabled() -> bool:
+    # Read at CALL time, not import time (same contract as
+    # GESConfig.counts_impl's default_factory): RING_ASYNC_DEBUG set after
+    # ``import repro`` must be honoured (regression-tested, lint rule R001).
+    return os.environ.get("RING_ASYNC_DEBUG", "0").lower() in (
+        "1", "true", "yes", "on")
 
 
 def _dbg(*parts) -> None:
-    if _DEBUG:
+    if _debug_enabled():
         print(f"[ring_async {time.monotonic():.3f}]", *parts, flush=True)
 
 

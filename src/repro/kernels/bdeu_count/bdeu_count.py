@@ -59,7 +59,10 @@ def contingency_counts_pallas(
 ) -> jax.Array:
     """(max_q, r_pad) f32 counts. cfg/child: (m,) int32, m % tile_m == 0."""
     m = cfg.shape[0]
-    assert m % tile_m == 0, (m, tile_m)
+    if m % tile_m != 0:
+        raise ValueError(
+            f"contingency_counts_pallas: m={m} must be a multiple of "
+            f"tile_m={tile_m} (ops.contingency_counts pads)")
     grid = (m // tile_m,)
     return pl.pallas_call(
         functools.partial(_kernel, max_q=max_q, r_pad=r_pad),

@@ -114,8 +114,14 @@ def sweep_counts_pallas(
     n % tile_n == 0 (callers pad; see ops.sweep_counts).
     """
     m, n = data.shape
-    assert m % tile_m == 0, (m, tile_m)
-    assert n % tile_n == 0, (n, tile_n)
+    if m % tile_m != 0:
+        raise ValueError(
+            f"sweep_counts_pallas: m={m} must be a multiple of "
+            f"tile_m={tile_m} (ops.sweep_counts pads)")
+    if n % tile_n != 0:
+        raise ValueError(
+            f"sweep_counts_pallas: n={n} must be a multiple of "
+            f"tile_n={tile_n} (ops.sweep_counts pads)")
     grid = (r_max, n // tile_n, m // tile_m)
     return pl.pallas_call(
         functools.partial(_kernel, max_q=max_q, r_max=r_max),
@@ -231,7 +237,10 @@ def delete_scores_pallas(
     ops.delete_scores).
     """
     m = cfg.shape[0]
-    assert m % tile_m == 0, (m, tile_m)
+    if m % tile_m != 0:
+        raise ValueError(
+            f"delete_scores_pallas: m={m} must be a multiple of "
+            f"tile_m={tile_m} (ops.delete_scores pads)")
     n_slots = slot_ar.shape[0]
     k_pad = cand_slot.shape[0]
     # One-hot chunk bound: the (chunk_q, max_q) scatter matrix stays <= ~4 MB

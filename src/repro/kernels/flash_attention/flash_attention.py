@@ -93,7 +93,10 @@ def flash_attention_pallas(
     """
     b, hq, t, d = q.shape
     _, hkv, s, _ = k.shape
-    assert hq % hkv == 0, (hq, hkv)
+    if hkv == 0 or hq % hkv != 0:
+        raise ValueError(
+            f"flash_attention_pallas: query heads hq={hq} must be a "
+            f"positive multiple of KV heads hkv={hkv} (GQA grouping)")
     group = hq // hkv
     if scale is None:
         scale = d ** -0.5

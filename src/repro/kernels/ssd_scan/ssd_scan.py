@@ -76,7 +76,10 @@ def ssd_scan_pallas(
 ) -> jax.Array:
     bsz, h, t, p = x.shape
     n = b.shape[-1]
-    assert t % chunk == 0, (t, chunk)
+    if t % chunk != 0:
+        raise ValueError(
+            f"ssd_scan_pallas: sequence length t={t} must be a multiple "
+            f"of chunk={chunk} (pad the time axis before calling)")
     grid = (bsz, h, t // chunk)
 
     return pl.pallas_call(

@@ -151,8 +151,11 @@ def _chunked_attention(q, k, v, causal: bool, q_offset, chunk: int) -> Array:
     b, t, h, d = q.shape
     s, kv = k.shape[1], k.shape[2]
     group = h // kv
+    if s % chunk != 0:
+        raise ValueError(
+            f"_chunked_attention: KV length s={s} must be a multiple of "
+            f"chunk={chunk} (caller pads the KV cache)")
     n_chunks = s // chunk
-    assert s % chunk == 0
     qg = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, t, kv, group, d)
     ks = k.reshape(b, n_chunks, chunk, kv, d).astype(jnp.float32)
     vs = v.reshape(b, n_chunks, chunk, kv, d).astype(jnp.float32)

@@ -21,7 +21,10 @@ def ssd_chunked(x: Array, a: Array, b: Array, c: Array, chunk: int,
     b/c: (B, H, T, N).  Returns (y, final_state (B, H, N, P))."""
     bsz, h, t, p = x.shape
     n = b.shape[-1]
-    assert t % chunk == 0, (t, chunk)
+    if t % chunk != 0:
+        raise ValueError(
+            f"ssd_chunked: sequence length t={t} must be a multiple of "
+            f"chunk={chunk} (pad the time axis before calling)")
     nc = t // chunk
 
     xs = x.reshape(bsz, h, nc, chunk, p).astype(jnp.float32)
